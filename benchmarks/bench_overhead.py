@@ -1,0 +1,62 @@
+"""Paper Fig 11 (TensorFlow-Serving comparison): Clipper's layered frontend
+vs a tightly-integrated direct jit call on the same models. The direct path
+is our stand-in for TF-Serving (single model, no cache/selection layers);
+the claim reproduced is that the modular stack adds minimal overhead at
+sustained throughput."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import D_FEAT, make_containers, np_call, time_batch
+from repro.core import make_clipper
+
+
+def _direct_throughput(fn, batch: int, rng, secs: float = 1.0):
+    x = jnp.asarray(rng.normal(size=(batch, D_FEAT)).astype(np.float32))
+    jax.block_until_ready(fn(x))
+    n = 0
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < secs:
+        jax.block_until_ready(fn(x))
+        n += batch
+    return n / (time.perf_counter() - t0)
+
+
+def _clipper_throughput(fn, batch: int, rng, secs: float = 1.0):
+    clip = make_clipper({"m": np_call(fn)}, "exp4", slo=0.1, cache_size=16,
+                        aimd_kwargs={"init": batch, "max_batch": batch})
+    n = 0
+    t0 = time.perf_counter()
+    i = 0
+    while time.perf_counter() - t0 < secs:
+        # submit one full batch then drain — sustained-throughput regime
+        for j in range(batch):
+            clip.submit(rng.normal(size=(D_FEAT,)).astype(np.float32),
+                        arrival_time=clip.now)
+        clip.run()
+        n += batch
+        i += 1
+    return n / (time.perf_counter() - t0)
+
+
+def run(rng=None) -> list:
+    rng = rng or np.random.default_rng(5)
+    fns = make_containers(rng)
+    rows = []
+    cases = {"mnist_like": ("mlp", 512), "cifar_like": ("big_mlp", 128),
+             "imagenet_like": ("kernel_svm", 16)}
+    for label, (name, batch) in cases.items():
+        direct = _direct_throughput(fns[name], batch, rng)
+        clipper = _clipper_throughput(fns[name], batch, rng)
+        rows.append({
+            "name": f"fig11_overhead/{label}",
+            "us_per_call": 1e6 / clipper,
+            "derived": (f"direct_qps={direct:.0f};clipper_qps={clipper:.0f};"
+                        f"ratio={clipper/direct:.2f}"),
+        })
+    return rows

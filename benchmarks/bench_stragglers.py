@@ -1,0 +1,57 @@
+"""Paper Fig 9: stragglers vs ensemble size — (a) latency with/without
+deadline rendering, (b) % queries with missing predictions, (c) accuracy.
+Calibrated simulation through the real frontend event loop."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_task, train_linear_model
+from repro.core import Feedback, linear_latency, make_clipper
+
+SLO = 0.020
+
+
+def _run(ensemble_size: int, rng, *, deadline: bool, n=600):
+    W, label = make_task(rng)
+    models = {}
+    lat = {}
+    for i in range(ensemble_size):
+        models[f"m{i}"] = train_linear_model(
+            rng, W, noise=0.2 + 0.05 * (i % 5), steps=25)
+        lat[f"m{i}"] = linear_latency(0.002, 5e-5, jitter=0.1,
+                                      p_straggle=0.03, straggle_factor=15,
+                                      rng=rng)
+    import numpy as _np
+    from benchmarks.common import np_call
+    slo = SLO if deadline else 10.0      # no-deadline = block for everyone
+    clip = make_clipper({k: np_call(v) for k, v in models.items()},
+                        "exp4", slo=slo, latency_models=lat)
+    xs = [rng.normal(size=(W.shape[0],)).astype(np.float32) for _ in range(n)]
+    qids = clip.replay([(i * 0.004, x, 0) for i, x in enumerate(xs)])
+    lats = np.asarray([clip.results[q].latency for q in qids])
+    missing = np.asarray([len(clip.results[q].missing_models) > 0
+                          for q in qids])
+    acc = np.mean([int(np.argmax(clip.results[q].y)) == label(x[None])[0]
+                   for q, x in zip(qids, xs)])
+    return (float(np.percentile(lats, 99)), float(missing.mean()), float(acc))
+
+
+def run(rng=None) -> list:
+    rng = rng or np.random.default_rng(3)
+    rows = []
+    for size in (2, 4, 8, 12):
+        p99_block, _, acc_block = _run(size, np.random.default_rng(size),
+                                       deadline=False)
+        p99_dead, miss, acc_dead = _run(size, np.random.default_rng(size),
+                                        deadline=True)
+        rows.append({
+            "name": f"fig9_stragglers/ensemble_{size}",
+            "us_per_call": p99_dead * 1e6,
+            "derived": (f"p99_block_ms={p99_block*1e3:.1f};"
+                        f"p99_deadline_ms={p99_dead*1e3:.1f};"
+                        f"pct_missing={miss*100:.0f}%;"
+                        f"acc_block={acc_block:.3f};acc_dead={acc_dead:.3f}"),
+        })
+    return rows

@@ -1,0 +1,125 @@
+"""Shared benchmark substrate: real jitted model containers of graded cost
+(the paper's linear-SVM .. kernel-SVM spectrum), synthetic tasks, timing."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+D_FEAT = 64
+N_CLASSES = 10
+
+
+def make_containers(rng: np.random.Generator) -> Dict[str, Callable]:
+    """Real jitted predictors spanning ~3 orders of magnitude of cost
+    (paper Fig 3's model spectrum, on CPU)."""
+    w_lin = jnp.asarray(rng.normal(size=(D_FEAT, N_CLASSES)) * 0.1)
+    w1 = jnp.asarray(rng.normal(size=(D_FEAT, 512)) * 0.1)
+    w2 = jnp.asarray(rng.normal(size=(512, N_CLASSES)) * 0.1)
+    wb1 = jnp.asarray(rng.normal(size=(D_FEAT, 2048)) * 0.1)
+    wb2 = jnp.asarray(rng.normal(size=(2048, 2048)) * 0.1)
+    wb3 = jnp.asarray(rng.normal(size=(2048, N_CLASSES)) * 0.1)
+    support = jnp.asarray(rng.normal(size=(4096, D_FEAT)))
+    alpha = jnp.asarray(rng.normal(size=(4096, N_CLASSES)) * 0.01)
+
+    @jax.jit
+    def linear_svm(x):
+        return x @ w_lin
+
+    @jax.jit
+    def mlp(x):
+        return jax.nn.relu(x @ w1) @ w2
+
+    @jax.jit
+    def big_mlp(x):
+        return jax.nn.relu(jax.nn.relu(x @ wb1) @ wb2) @ wb3
+
+    @jax.jit
+    def kernel_svm(x):
+        d2 = ((x[:, None, :] - support[None, :, :]) ** 2).sum(-1)
+        return jnp.exp(-0.01 * d2) @ alpha
+
+    @jax.jit
+    def noop(x):
+        return x[:, :N_CLASSES]
+
+    return {"linear_svm": linear_svm, "mlp": mlp, "big_mlp": big_mlp,
+            "kernel_svm": kernel_svm, "noop": noop}
+
+
+def np_call(fn: Callable) -> Callable:
+    return lambda x: np.asarray(fn(jnp.asarray(x)))
+
+
+def time_batch(fn: Callable, x: np.ndarray, iters: int = 5) -> float:
+    """Median wall-clock seconds for one batched call (post-warmup)."""
+    xj = jnp.asarray(x)
+    jax.block_until_ready(fn(xj))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(xj))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def fit_linear_latency(fn: Callable, rng, sizes=(1, 4, 16, 64, 256)
+                       ) -> Tuple[float, float]:
+    """Measure the latency profile, return (base_s, per_item_s)."""
+    xs, ys = [], []
+    for b in sizes:
+        x = rng.normal(size=(b, D_FEAT)).astype(np.float32)
+        xs.append(b)
+        ys.append(time_batch(fn, x))
+    a = float(np.cov(xs, ys, bias=True)[0, 1] / np.var(xs))
+    b0 = float(np.median(np.asarray(ys) - a * np.asarray(xs)))
+    return max(b0, 1e-6), max(a, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# synthetic classification task + quickly-trained jax models (Figs 7/8/10)
+# ---------------------------------------------------------------------------
+
+def make_task(rng, d=D_FEAT, k=N_CLASSES):
+    W = rng.normal(size=(d, k)).astype(np.float32)
+
+    def label(x: np.ndarray) -> np.ndarray:
+        return np.argmax(x @ W, axis=-1)
+
+    return W, label
+
+
+def train_linear_model(rng, W_true, *, noise: float, n_train: int = 2000,
+                       steps: int = 60, feature_mask: np.ndarray = None):
+    """Train a linear softmax model on noisy data — graded model quality."""
+    d, k = W_true.shape
+    X = rng.normal(size=(n_train, d)).astype(np.float32)
+    y = np.argmax(X @ W_true, axis=-1)
+    flip = rng.random(n_train) < noise
+    y = np.where(flip, rng.integers(0, k, n_train), y)
+    mask = np.ones(d, np.float32) if feature_mask is None else feature_mask
+    Xj, yj = jnp.asarray(X * mask), jnp.asarray(y)
+
+    def loss(w):
+        logits = Xj @ w
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(yj)), yj])
+
+    w = jnp.zeros((d, k))
+    lr = 0.5
+    g = jax.jit(jax.grad(loss))
+    for _ in range(steps):
+        w = w - lr * g(w)
+
+    @jax.jit
+    def predict(x):
+        return jax.nn.softmax((x * mask) @ w)
+
+    return predict
+
+
+def percentile(xs: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")

@@ -1,0 +1,46 @@
+"""Benchmark harness — one suite per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract). Roofline
+numbers come from the dry-run artifacts (launch/roofline.py), not from here.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    from benchmarks import (bench_batching, bench_cache, bench_context,
+                            bench_ensembles, bench_overhead, bench_scaling,
+                            bench_stragglers)
+
+    suites = [
+        ("fig3/4/5 batching", bench_batching),
+        ("fig6 scaling", bench_scaling),
+        ("fig7/8 ensembles", bench_ensembles),
+        ("fig9 stragglers", bench_stragglers),
+        ("fig10 context", bench_context),
+        ("fig11 overhead", bench_overhead),
+        ("sec4.2 cache", bench_cache),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for label, mod in suites:
+        if only and only not in label and only not in mod.__name__:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # pragma: no cover — keep the harness running
+            print(f"{mod.__name__}/ERROR,0,{type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")
+        print(f"# {label}: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Adaptive batching demo (paper §4.3, Figs 3-4 live).
+
+Measures the real latency profile of two jitted models on this machine,
+then shows AIMD discovering each one's maximum SLO-compliant batch size
+online — no manual tuning (the paper's core §4.3 claim).
+
+Run:  PYTHONPATH=src python examples/adaptive_batching_demo.py
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import D_FEAT, make_containers, time_batch
+from repro.core import AIMDController
+
+
+def main():
+    rng = np.random.default_rng(0)
+    fns = make_containers(rng)
+    slo = 0.020
+    for name in ("linear_svm", "kernel_svm", "big_mlp"):
+        fn = fns[name]
+        ctrl = AIMDController(slo, additive=4, backoff=0.9)
+        history = []
+        for step in range(60):
+            b = ctrl.max_batch_size
+            x = rng.normal(size=(b, D_FEAT)).astype(np.float32)
+            lat = time_batch(fn, x, iters=1)
+            ctrl.record(b, lat)
+            history.append((b, lat))
+        bs = [h[0] for h in history]
+        print(f"{name:12s}: AIMD converged max batch = {ctrl.max_batch_size:5d} "
+              f"(path: {bs[0]} -> {bs[10]} -> {bs[30]} -> {bs[-1]}), "
+              f"latency at converged batch = {history[-1][1]*1e3:.1f} ms "
+              f"(SLO {slo*1e3:.0f} ms)")
+    print("\nNo per-model tuning: the same controller found each container's "
+          "throughput-optimal batch under the latency objective (Fig 4).")
+
+
+if __name__ == "__main__":
+    main()

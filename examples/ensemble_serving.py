@@ -1,0 +1,71 @@
+"""Ensemble serving with online model selection (paper §5 end to end).
+
+Deploys five models of graded quality behind the Clipper frontend with the
+Exp4 ensemble policy, streams queries with feedback, injects a model failure
+mid-stream, and shows the selection layer routing around it (Fig 8 live).
+
+Run:  PYTHONPATH=src python examples/ensemble_serving.py
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import make_task, np_call, train_linear_model
+from repro.core import Feedback, linear_latency, make_clipper
+from repro.core.selection import exp4_weights
+
+
+def main():
+    rng = np.random.default_rng(0)
+    W, label = make_task(rng)
+    print("training 5 base models (graded label noise)...")
+    models, state = {}, {"broken": False}
+    for i, nz in enumerate([0.5, 0.4, 0.3, 0.2, 0.1]):
+        fn = np_call(train_linear_model(rng, W, noise=nz))
+        if i == 4:                                    # best model, will fail
+            base = fn
+            fn = (lambda x: rng.normal(size=(len(x), W.shape[1]))
+                  if state["broken"] else base(x))
+        models[f"m{i}"] = fn
+
+    clip = make_clipper(
+        models, "exp4", slo=0.020,
+        latency_models={m: linear_latency(0.001, 2e-5) for m in models})
+
+    t, window_err = 0.0, []
+
+    def serve(n, tag):
+        nonlocal t
+        errs = []
+        for _ in range(n):
+            x = rng.normal(size=(W.shape[0],)).astype(np.float32)
+            clip.run(until=t)
+            qid = clip.submit(x, arrival_time=t)
+            t += 0.002
+            clip.run()
+            pred = clip.results[qid]
+            y = int(label(x[None])[0])
+            errs.append(int(np.argmax(pred.y) != y))
+            clip.feedback(Feedback(qid, x, y))
+        w = np.asarray(exp4_weights(clip.policy_state))
+        print(f"  [{tag}] err={np.mean(errs):.3f}  "
+              f"weights={np.array2string(w, precision=2)}")
+        return np.mean(errs)
+
+    print("phase 1: all models healthy")
+    serve(400, "healthy")
+    print("phase 2: best model (m4) fails — watch Exp4 reroute")
+    state["broken"] = True
+    serve(400, "failed ")
+    print("phase 3: m4 recovers")
+    state["broken"] = False
+    serve(400, "healed ")
+    print("done — the ensemble absorbed a model failure with no operator "
+          "action (paper Fig 8).")
+
+
+if __name__ == "__main__":
+    main()

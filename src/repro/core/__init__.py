@@ -1,0 +1,30 @@
+"""Clipper core: the paper's contribution as composable JAX modules.
+
+Layers (paper Figure 1):
+  model selection  - selection.py (Exp3/Exp4), context.py, straggler.py
+  model abstraction - cache.py (CLOCK), batching.py (AIMD), containers.py
+  frontend          - frontend.py (REST-equivalent: submit / feedback)
+"""
+
+from repro.core.batching import (AIMDController, BatchQueue, FixedController,
+                                 QuantileRegressionController, bucket)
+from repro.core.cache import ClockCache, PredictionCache
+from repro.core.containers import (JaxModelContainer, ReplicaSet,
+                                   linear_latency)
+from repro.core.context import ContextualStore
+from repro.core.frontend import Clipper, make_clipper
+from repro.core.interfaces import Feedback, Prediction, Query
+from repro.core.selection import (Exp3Policy, Exp4Policy, exp3_init,
+                                  exp3_observe, exp3_probs, exp4_combine,
+                                  exp4_init, exp4_observe, exp4_weights)
+from repro.core.straggler import DeadlineTracker, assemble_preds
+
+__all__ = [
+    "AIMDController", "BatchQueue", "FixedController",
+    "QuantileRegressionController", "bucket", "ClockCache", "PredictionCache",
+    "JaxModelContainer", "ReplicaSet", "linear_latency", "ContextualStore",
+    "Clipper", "make_clipper", "Feedback", "Prediction", "Query",
+    "Exp3Policy", "Exp4Policy", "exp3_init", "exp3_observe", "exp3_probs",
+    "exp4_combine", "exp4_init", "exp4_observe", "exp4_weights",
+    "DeadlineTracker", "assemble_preds",
+]

@@ -1,0 +1,177 @@
+"""Adaptive batching (paper §4.3).
+
+* ``AIMDController`` — additive-increase / multiplicative-decrease search for
+  the largest batch size whose evaluation latency stays under the SLO
+  (paper §4.3.1; small 10% backoff because the optimum is stable).
+* ``QuantileRegressionController`` — the alternative the paper compares
+  against: estimate P99 latency as a linear function of batch size via
+  pinball-loss regression, invert for the SLO.
+* ``BatchQueue`` — per-container queue with *delayed batching* (paper
+  §4.3.2, Nagle-style) and max-batch admission.
+* ``bucket`` — TPU adaptation (DESIGN.md §2): XLA needs static shapes, so
+  dispatched batches are padded up a geometric bucket ladder; AIMD adapts
+  admission while buckets bound recompilation.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.interfaces import Query
+
+
+# ---------------------------------------------------------------------------
+# batch-size controllers
+# ---------------------------------------------------------------------------
+
+class AIMDController:
+    """Additive-increase (+``additive``) until the SLO is exceeded, then a
+    multiplicative backoff (x``backoff``). The paper uses a small backoff
+    (10%) because the optimal batch size does not fluctuate much."""
+
+    def __init__(self, slo: float, *, additive: int = 2, backoff: float = 0.9,
+                 init: int = 1, max_batch: int = 4096):
+        assert 0 < backoff < 1 and additive >= 1
+        self.slo = slo
+        self.additive = additive
+        self.backoff = backoff
+        self.cap = max_batch
+        self._max = float(init)
+
+    @property
+    def max_batch_size(self) -> int:
+        return max(1, int(self._max))
+
+    def record(self, batch_size: int, latency: float) -> None:
+        if batch_size < self.max_batch_size:
+            return        # under-full batch: not informative about the limit
+        if latency > self.slo:
+            self._max = max(1.0, self._max * self.backoff)
+        else:
+            self._max = min(float(self.cap), self._max + self.additive)
+
+
+class QuantileRegressionController:
+    """Estimate latency_q(batch) ≈ a*batch + b at quantile ``q``, then set
+    max_batch = (slo - b) / a.
+
+    The latency profile is strongly linear (paper Fig 3), so the slope comes
+    from ordinary least squares and the intercept from the empirical
+    q-quantile of the residuals — a deterministic, scale-free estimator
+    (pinball SGD at q=0.99 converges pathologically slowly). Exploration:
+    until the window covers >= 2 distinct batch sizes, the bound grows
+    additively like AIMD so the regression has signal to fit."""
+
+    def __init__(self, slo: float, *, q: float = 0.99, window: int = 512,
+                 max_batch: int = 4096, refit_every: int = 16):
+        self.slo = slo
+        self.q = q
+        self.window: Deque[Tuple[int, float]] = deque(maxlen=window)
+        self.cap = max_batch
+        self.refit_every = refit_every
+        self._n = 0
+        self._a, self._b = 0.0, 0.0
+        self._max = 1
+
+    @property
+    def max_batch_size(self) -> int:
+        return self._max
+
+    def record(self, batch_size: int, latency: float) -> None:
+        self.window.append((batch_size, latency))
+        self._n += 1
+        # explore upward only until the regression has signal to fit
+        if (self._a == 0.0 and latency <= self.slo
+                and batch_size >= self._max):
+            self._max = min(self.cap, self._max + 1)
+        if self._n % self.refit_every == 0 and len(self.window) >= 8:
+            self._fit()
+
+    def _fit(self) -> None:
+        data = np.asarray(self.window, dtype=np.float64)
+        x, y = data[:, 0], data[:, 1]
+        if np.ptp(x) < 1e-9:
+            return                      # no batch-size variation yet
+        a = float(np.cov(x, y, bias=True)[0, 1] / np.var(x))
+        b = float(np.quantile(y - a * x, self.q))
+        self._a, self._b = a, b
+        if a <= 1e-12:
+            self._max = self.cap
+        else:
+            self._max = int(np.clip((self.slo - b) / a, 1, self.cap))
+
+
+class FixedController:
+    """No adaptivity — the paper's 'no batching' / static baseline."""
+
+    def __init__(self, size: int = 1):
+        self._max = size
+
+    @property
+    def max_batch_size(self) -> int:
+        return self._max
+
+    def record(self, batch_size: int, latency: float) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# bucketed static shapes (TPU adaptation)
+# ---------------------------------------------------------------------------
+
+def bucket(n: int, *, ladder: Sequence[int] = (), cap: int = 4096) -> int:
+    """Smallest ladder size >= n (default: powers of two up to cap; above
+    the cap the exact size is returned — no padding, no recompile guard)."""
+    if ladder:
+        for b in ladder:
+            if b >= n:
+                return b
+        return max(ladder[-1], n)
+    b = 1
+    while b < n and b < cap:
+        b <<= 1
+    return max(b, n) if n > cap else b
+
+
+# ---------------------------------------------------------------------------
+# per-container queue with delayed batching
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BatchQueue:
+    """Adaptive batching queue for one model container (paper §4.3).
+
+    ``batch_delay``: under moderate load, hold dispatch up to this long after
+    the oldest enqueued query so more queries can join (paper §4.3.2)."""
+
+    controller: AIMDController
+    batch_delay: float = 0.0
+    _q: Deque[Query] = field(default_factory=deque)
+
+    def put(self, query: Query) -> None:
+        self._q.append(query)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def oldest_arrival(self) -> Optional[float]:
+        return self._q[0].arrival_time if self._q else None
+
+    def ready(self, now: float) -> bool:
+        if not self._q:
+            return False
+        if len(self._q) >= self.controller.max_batch_size:
+            return True
+        return (now - self._q[0].arrival_time) >= self.batch_delay
+
+    def next_batch(self, now: float) -> List[Query]:
+        """Dequeue up to the controller's current max batch size."""
+        n = min(len(self._q), self.controller.max_batch_size)
+        return [self._q.popleft() for _ in range(n)]
+
+    def record(self, batch_size: int, latency: float) -> None:
+        self.controller.record(batch_size, latency)

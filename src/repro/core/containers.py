@@ -1,0 +1,117 @@
+"""Model containers (paper §4.4).
+
+``JaxModelContainer`` wraps any jitted predict function behind the uniform
+``pred_batch`` interface, with bucket-padded static shapes (TPU adaptation).
+Docker process isolation becomes *compilation isolation*: each container
+owns its executable and device buffers (DESIGN.md §2).
+
+``service_time`` is pluggable: ``measured`` wall-clock (real execution) or a
+calibrated latency model (cluster-scale benches + straggler injection —
+paper Figs 6 & 9). ``ReplicaSet`` scales a container across replicas, each
+with its *own* adaptive batching queue (paper §4.4.1)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.batching import AIMDController, BatchQueue, bucket
+
+
+LatencyModel = Callable[[int], float]    # batch_size -> service seconds
+
+
+def linear_latency(base: float, per_item: float,
+                   jitter: float = 0.0, p_straggle: float = 0.0,
+                   straggle_factor: float = 10.0,
+                   rng: Optional[np.random.Generator] = None) -> LatencyModel:
+    """The paper's empirically-observed linear latency profile (Fig 3), with
+    optional straggler injection for §5.2.2 experiments."""
+    rng = rng or np.random.default_rng(0)
+
+    def model(n: int) -> float:
+        t = base + per_item * n
+        if jitter:
+            t *= float(1.0 + rng.normal(0, jitter))
+        if p_straggle and rng.random() < p_straggle:
+            t *= straggle_factor
+        return max(t, 1e-6)
+
+    return model
+
+
+@dataclass
+class ContainerStats:
+    batches: int = 0
+    queries: int = 0
+    busy_time: float = 0.0
+    failures: int = 0
+
+
+class JaxModelContainer:
+    """Uniform batch-prediction container around a jitted callable.
+
+    predict_fn: np.ndarray [B, ...] -> np.ndarray [B, ...]; inputs are padded
+    to the bucket ladder so XLA compiles one executable per bucket."""
+
+    def __init__(self, model_id: str, predict_fn: Callable,
+                 *, latency_model: Optional[LatencyModel] = None,
+                 bucket_cap: int = 4096, fail: bool = False):
+        self.model_id = model_id
+        self._fn = predict_fn
+        self.latency_model = latency_model
+        self.bucket_cap = bucket_cap
+        self.stats = ContainerStats()
+        self.fail = fail            # health: failed containers are skipped
+
+    def pred_batch(self, inputs: Sequence[Any]) -> List[Any]:
+        ys, _ = self.pred_batch_timed(inputs)
+        return ys
+
+    def pred_batch_timed(self, inputs: Sequence[Any]):
+        """Returns (outputs, service_time). service_time is measured when no
+        latency model is installed, modeled otherwise."""
+        n = len(inputs)
+        x = np.stack([np.asarray(v) for v in inputs])
+        nb = bucket(n, cap=self.bucket_cap)
+        if nb != n:
+            pad = np.repeat(x[-1:], nb - n, axis=0)
+            x = np.concatenate([x, pad], axis=0)
+        t0 = time.perf_counter()
+        y = np.asarray(self._fn(x))
+        measured = time.perf_counter() - t0
+        service = (self.latency_model(n) if self.latency_model is not None
+                   else measured)
+        self.stats.batches += 1
+        self.stats.queries += n
+        self.stats.busy_time += service
+        return [y[i] for i in range(n)], service
+
+
+class ReplicaSet:
+    """Container replicas with per-replica adaptive batching (paper §4.4.1).
+
+    Replicas may have heterogeneous performance (different latency models);
+    dispatch picks the earliest-free replica."""
+
+    def __init__(self, replicas: Sequence[JaxModelContainer],
+                 make_controller: Callable[[], AIMDController],
+                 batch_delay: float = 0.0):
+        assert replicas
+        self.model_id = replicas[0].model_id
+        self.replicas = list(replicas)
+        self.queues = [BatchQueue(make_controller(), batch_delay)
+                       for _ in replicas]
+        self.free_at = [0.0 for _ in replicas]
+
+    def healthy(self) -> List[int]:
+        return [i for i, r in enumerate(self.replicas) if not r.fail]
+
+    def pick(self, now: float) -> Optional[int]:
+        h = self.healthy()
+        if not h:
+            return None
+        return min(h, key=lambda i: max(self.free_at[i], now))

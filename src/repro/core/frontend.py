@@ -1,0 +1,260 @@
+"""The Clipper frontend (paper §3): the application-facing serving loop that
+composes the model abstraction layer (cache → adaptive batching → containers)
+with the model selection layer (select → combine → observe, straggler-safe).
+
+Implemented as a discrete-event loop with an injectable clock:
+
+* wall-clock mode — containers execute for real and completion times come
+  from measured execution (overhead benches, quickstart);
+* calibrated-simulation mode — containers still execute (real outputs) but
+  completion times come from their latency models, letting one CPU core
+  faithfully replay cluster-scale scenarios (replica scaling, stragglers —
+  paper Figs 6 & 9; documented in DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.batching import AIMDController, BatchQueue
+from repro.core.cache import PredictionCache
+from repro.core.containers import JaxModelContainer, ReplicaSet
+from repro.core.interfaces import Feedback, Prediction, Query
+from repro.core.selection import Exp3Policy, Exp4Policy
+from repro.core.straggler import assemble_preds
+
+
+@dataclass(order=True)
+class _Event:
+    at: float
+    seq: int
+    kind: str = field(compare=False)          # 'complete' | 'deadline'
+    payload: Any = field(compare=False, default=None)
+
+
+class Clipper:
+    """End-to-end prediction serving frontend."""
+
+    def __init__(self, replica_sets: Dict[str, ReplicaSet], policy, *,
+                 slo: float = 0.020, cache_size: int = 4096,
+                 loss_fn: Optional[Callable[[Any, Any], float]] = None,
+                 contextual_store=None, seed: int = 0,
+                 use_cache: bool = True):
+        self.replica_sets = replica_sets
+        self.policy = policy
+        self.slo = slo
+        self.cache = PredictionCache(cache_size) if use_cache else None
+        self.loss_fn = loss_fn or _default_loss
+        self.contextual = contextual_store
+        self.rng = np.random.default_rng(seed)
+        self.policy_state = policy.init()
+        self._events: List[_Event] = []
+        self._eseq = itertools.count()
+        self._qseq = itertools.count()
+        self.now = 0.0
+        self._pending: Dict[int, dict] = {}     # qid -> bookkeeping
+        self.results: Dict[int, Prediction] = {}
+        self._feedback_hits = 0
+        self._feedback_misses = 0
+
+    # ------------------------------------------------------------------
+    # application API
+    # ------------------------------------------------------------------
+    def submit(self, x, *, context_id: int = 0,
+               arrival_time: Optional[float] = None) -> int:
+        """Issue a prediction request; returns the query id."""
+        at = self.now if arrival_time is None else arrival_time
+        self.now = max(self.now, at)
+        qid = next(self._qseq)
+        q = Query(qid, x, context_id, at, deadline=at + self.slo)
+        chosen = self.policy.select(self._policy_state_for(q), x, self.rng)
+        entry = {"query": q, "need": set(chosen), "preds": {}, "done": False}
+        self._pending[qid] = entry
+        for mid in chosen:
+            if self.cache is not None and self.cache.request(mid, x):
+                entry["preds"][mid] = self.cache.fetch(mid, x)
+            else:
+                self.replica_sets[mid].queues[0].put(q) \
+                    if len(self.replica_sets[mid].queues) == 1 else \
+                    self._enqueue_least_loaded(mid, q)
+        self._push(q.deadline, "deadline", qid)
+        self._maybe_finalize(entry)
+        return qid
+
+    def feedback(self, fb: Feedback) -> None:
+        """Join feedback with cached predictions and update selection state
+        (paper §4.2 + §5). Missing predictions are recomputed — the cost the
+        cache exists to avoid."""
+        preds: Dict[str, Any] = {}
+        for mid, rs in self.replica_sets.items():
+            y = self.cache.fetch(mid, fb.x) if self.cache is not None else None
+            if y is None:
+                self._feedback_misses += 1
+                y = rs.replicas[0].pred_batch([fb.x])[0]
+                if self.cache is not None:
+                    self.cache.put(mid, fb.x, y)
+            else:
+                self._feedback_hits += 1
+            preds[mid] = y
+        losses = {mid: self.loss_fn(y, fb.y_true) for mid, y in preds.items()}
+        if self.contextual is not None:
+            self._observe_contextual(fb, losses)
+        else:
+            self.policy_state = self.policy.observe(
+                self.policy_state, fb.x, losses, preds)
+
+    # ------------------------------------------------------------------
+    # event loop
+    # ------------------------------------------------------------------
+    def run(self, until: Optional[float] = None) -> None:
+        """Process events and dispatch ready batches until quiescent (or
+        until the given virtual time)."""
+        while True:
+            self._dispatch_ready()
+            if not self._events:
+                break
+            ev = heapq.heappop(self._events)
+            if until is not None and ev.at > until:
+                heapq.heappush(self._events, ev)
+                break
+            self.now = max(self.now, ev.at)
+            if ev.kind == "complete":
+                self._on_complete(**ev.payload)
+            elif ev.kind == "deadline":
+                self._on_deadline(ev.payload)
+
+    def _dispatch_ready(self) -> None:
+        progressed = True
+        while progressed:
+            progressed = False
+            for mid, rs in self.replica_sets.items():
+                for ri, queue in enumerate(rs.queues):
+                    if not queue.ready(self.now):
+                        continue
+                    if rs.free_at[ri] > self.now or rs.replicas[ri].fail:
+                        continue
+                    batch = queue.next_batch(self.now)
+                    if not batch:
+                        continue
+                    outs, service = rs.replicas[ri].pred_batch_timed(
+                        [q.x for q in batch])
+                    done_at = self.now + service
+                    rs.free_at[ri] = done_at
+                    self._push(done_at, "complete", dict(
+                        mid=mid, ri=ri, batch=batch, outs=outs,
+                        service=service, size=len(batch)))
+                    progressed = True
+
+    def _on_complete(self, mid, ri, batch, outs, service, size) -> None:
+        rs = self.replica_sets[mid]
+        rs.queues[ri].record(size, service)
+        for q, y in zip(batch, outs):
+            if self.cache is not None:
+                self.cache.put(mid, q.x, y)
+            entry = self._pending.get(q.query_id)
+            if entry is None or entry["done"]:
+                continue                      # already straggler-finalized
+            entry["preds"][mid] = y
+            self._maybe_finalize(entry)
+
+    def _on_deadline(self, qid: int) -> None:
+        entry = self._pending.get(qid)
+        if entry is None or entry["done"]:
+            return
+        if entry["preds"]:
+            self._finalize(entry, at_deadline=True)
+        # no predictions at all: leave pending; it completes when the first
+        # model returns (latency SLO already blown — recorded as violation)
+
+    def _maybe_finalize(self, entry) -> None:
+        if not entry["done"] and entry["need"] <= set(entry["preds"]):
+            self._finalize(entry, at_deadline=False)
+
+    def _finalize(self, entry, *, at_deadline: bool) -> None:
+        q: Query = entry["query"]
+        preds = {m: p for m, p in entry["preds"].items()}
+        s = self._policy_state_for(q)
+        y, conf = self.policy.combine(s, q.x, preds)
+        missing = tuple(sorted(entry["need"] - set(preds)))
+        entry["done"] = True
+        self.results[q.query_id] = Prediction(
+            q.query_id, y, conf, tuple(sorted(preds)),
+            latency=self.now - q.arrival_time,
+            missing_models=missing)
+
+    # ------------------------------------------------------------------
+    def _policy_state_for(self, q: Query):
+        if self.contextual is not None:
+            return self.contextual.state_for(q.context_id)
+        return self.policy_state
+
+    def _observe_contextual(self, fb: Feedback, losses: Dict[str, float]):
+        ids = list(self.policy.model_ids)
+        lvec = np.asarray([losses.get(m, 0.0) for m in ids], np.float32)
+        if isinstance(self.policy, Exp3Policy):
+            i = int(np.argmin(lvec))  # feedback for evaluated model only
+            self.contextual.observe_exp3(np.asarray([fb.context_id]),
+                                         np.asarray([i]), lvec[i:i + 1])
+        else:
+            self.contextual.observe_exp4(np.asarray([fb.context_id]),
+                                         lvec[None, :])
+
+    def _enqueue_least_loaded(self, mid: str, q: Query) -> None:
+        rs = self.replica_sets[mid]
+        h = rs.healthy() or list(range(len(rs.queues)))
+        ri = min(h, key=lambda i: len(rs.queues[i]))
+        rs.queues[ri].put(q)
+
+    def _push(self, at: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, _Event(at, next(self._eseq), kind, payload))
+
+    def replay(self, trace: Sequence[Tuple[float, Any, int]]) -> List[int]:
+        """Open-loop replay of an arrival trace [(arrival_time, x, context_id)]
+        — events are processed *between* arrivals so the virtual clock
+        advances realistically. Returns query ids in order."""
+        qids = []
+        for at, x, ctx in trace:
+            self.run(until=at)
+            qids.append(self.submit(x, context_id=ctx, arrival_time=at))
+        self.run()
+        return qids
+
+    # ------------------------------------------------------------------
+    @property
+    def feedback_cache_hit_rate(self) -> float:
+        tot = self._feedback_hits + self._feedback_misses
+        return self._feedback_hits / tot if tot else 0.0
+
+
+def _default_loss(y, y_true) -> float:
+    """0/1 loss on argmax for class scores; absolute error otherwise."""
+    y = np.asarray(y)
+    if y.ndim >= 1 and y.size > 1:
+        return float(np.argmax(y) != np.asarray(y_true))
+    return float(min(1.0, abs(float(y) - float(y_true))))
+
+
+def make_clipper(models: Dict[str, Callable], policy_kind: str = "exp4", *,
+                 slo: float = 0.020, replicas: int = 1,
+                 latency_models: Optional[Dict[str, Any]] = None,
+                 batch_delay: float = 0.0, cache_size: int = 4096,
+                 aimd_kwargs: Optional[dict] = None,
+                 **kw) -> Clipper:
+    """Convenience constructor: plain predict fns -> containers -> Clipper."""
+    aimd_kwargs = aimd_kwargs or {}
+    sets = {}
+    for mid, fn in models.items():
+        lm = (latency_models or {}).get(mid)
+        reps = [JaxModelContainer(mid, fn, latency_model=lm)
+                for _ in range(replicas)]
+        sets[mid] = ReplicaSet(
+            reps, lambda: AIMDController(slo, **aimd_kwargs), batch_delay)
+    ids = sorted(models)
+    policy = Exp3Policy(ids) if policy_kind == "exp3" else Exp4Policy(ids)
+    return Clipper(sets, policy, slo=slo, cache_size=cache_size, **kw)

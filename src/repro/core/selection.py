@@ -1,0 +1,163 @@
+"""Model selection layer (paper §5): Exp3 single-model selection and Exp4
+ensemble selection, as pure-JAX state updates.
+
+States are plain arrays so the contextual store (§5.3) can hold one state
+per user, shard them across the mesh, and apply feedback in batched, jitted,
+vmapped updates — the TPU-native replacement for the paper's Redis-backed
+per-session state (DESIGN.md §2)."""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Exp3 (paper §5.1) — pure functions over a log-weight state [k]
+# ---------------------------------------------------------------------------
+
+def exp3_init(k: int) -> jax.Array:
+    return jnp.zeros((k,), jnp.float32)          # log weights
+
+def exp3_probs(s: jax.Array) -> jax.Array:
+    return jax.nn.softmax(s)
+
+def exp3_select(s: jax.Array, rng_key) -> jax.Array:
+    """Sample a model index from the Exp3 distribution."""
+    return jax.random.categorical(rng_key, s)
+
+LOG_WEIGHT_FLOOR = -20.0   # bounded pessimism: caps how far a model can fall
+                           # behind, so recovery after healing is fast (the
+                           # Fixed-Share-style behaviour visible in Fig 8)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def exp3_observe(s: jax.Array, chosen: jax.Array, loss: jax.Array,
+                 eta: float = 0.1) -> jax.Array:
+    """w_i <- w_i * exp(-eta * L / p_i) for the selected model i."""
+    p = exp3_probs(s)
+    upd = -eta * loss / jnp.maximum(p[chosen], 1e-6)
+    s = s.at[chosen].add(upd)
+    s = s - jax.nn.logsumexp(s)                  # renormalize for stability
+    return jnp.maximum(s, LOG_WEIGHT_FLOOR)
+
+
+# ---------------------------------------------------------------------------
+# Exp4 (paper §5.2) — ensemble weights with per-model losses
+# ---------------------------------------------------------------------------
+
+def exp4_init(k: int) -> jax.Array:
+    return jnp.zeros((k,), jnp.float32)
+
+def exp4_weights(s: jax.Array) -> jax.Array:
+    return jax.nn.softmax(s)
+
+def exp4_combine(s: jax.Array, preds: jax.Array,
+                 available: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Weighted combination of base predictions.
+
+    preds: [k, C] per-model class scores (or [k] scalars). available: [k]
+    bool mask (straggler mitigation §5.2.2). Returns (combined, confidence)
+    where confidence = weighted fraction of available models that agree with
+    the final argmax (paper §5.2.1)."""
+    w = exp4_weights(s)
+    if available is not None:
+        w = w * available
+        w = w / jnp.maximum(w.sum(), 1e-9)
+    combined = jnp.einsum("k,k...->...", w, preds.astype(jnp.float32))
+    if preds.ndim > 1:
+        final = jnp.argmax(combined, axis=-1)
+        votes = jnp.argmax(preds, axis=-1)           # [k]
+        agree = (votes == final).astype(jnp.float32)
+    else:
+        agree = jnp.ones_like(w)
+    mask = available if available is not None else jnp.ones_like(w)
+    conf = jnp.sum(agree * mask) / jnp.maximum(jnp.sum(mask), 1e-9)
+    return combined, conf
+
+@functools.partial(jax.jit, static_argnames=())
+def exp4_observe(s: jax.Array, losses: jax.Array, eta: float = 0.1,
+                 available: Optional[jax.Array] = None) -> jax.Array:
+    """Down-weight each model by its own loss (losses in [0,1], [k])."""
+    if available is not None:
+        losses = jnp.where(available, losses, 0.0)   # no update for missing
+    s = s - eta * losses
+    s = s - jax.nn.logsumexp(s)
+    return jnp.maximum(s, LOG_WEIGHT_FLOOR)
+
+
+# ---------------------------------------------------------------------------
+# policy objects implementing the paper's Listing-2 interface
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Exp3Policy:
+    """Single-model selection: one model evaluated per query (cheap)."""
+
+    model_ids: Sequence[str]
+    eta: float = 0.1
+
+    def init(self):
+        return exp3_init(len(self.model_ids))
+
+    def select(self, s, x, rng: np.random.Generator) -> List[str]:
+        p = np.asarray(exp3_probs(s))
+        i = int(rng.choice(len(p), p=p / p.sum()))
+        return [self.model_ids[i]]
+
+    def combine(self, s, x, preds: Dict[str, Any]):
+        (mid, y), = preds.items()
+        return y, 1.0
+
+    def observe(self, s, x, loss_by_model: Dict[str, float], preds):
+        (mid, loss), = loss_by_model.items()
+        i = self.model_ids.index(mid)
+        return exp3_observe(s, jnp.int32(i), jnp.float32(loss), self.eta)
+
+
+@dataclass
+class Exp4Policy:
+    """Ensemble selection: all models evaluated, predictions combined
+    (paper §5.2); supports straggler-masked combine (§5.2.2)."""
+
+    model_ids: Sequence[str]
+    eta: float = 0.1
+
+    def init(self):
+        return exp4_init(len(self.model_ids))
+
+    def select(self, s, x, rng) -> List[str]:
+        return list(self.model_ids)
+
+    def combine(self, s, x, preds: Dict[str, Any]):
+        # pure-numpy hot path: this runs per query on the frontend host —
+        # a per-query jitted-JAX dispatch would dominate serving overhead
+        # (batched/vmapped state *updates* stay in JAX: context.py)
+        w = np.exp(np.asarray(s, np.float64))
+        avail = np.asarray([m in preds for m in self.model_ids])
+        w = w * avail
+        w = w / max(w.sum(), 1e-12)
+        mean = np.mean([np.asarray(preds[m], np.float32)
+                        for m in self.model_ids if m in preds], axis=0)
+        mat = np.stack([np.asarray(preds[m], np.float32) if m in preds
+                        else mean for m in self.model_ids])
+        combined = np.einsum("k,k...->...", w, mat)
+        if mat.ndim > 1:
+            votes = mat.argmax(-1)
+            conf = float(((votes == combined.argmax(-1)) & avail).sum()
+                         / max(avail.sum(), 1))
+        else:
+            conf = 1.0
+        return combined, conf
+
+    def observe(self, s, x, loss_by_model: Dict[str, float], preds):
+        losses = jnp.asarray([loss_by_model.get(m, 0.0) for m in self.model_ids],
+                             jnp.float32)
+        avail = jnp.asarray([m in loss_by_model for m in self.model_ids])
+        return exp4_observe(s, losses, self.eta, avail)

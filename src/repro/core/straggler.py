@@ -1,0 +1,58 @@
+"""Straggler mitigation (paper §5.2.2).
+
+Design choice from the paper: a *late* prediction is worse than an
+*inaccurate* one. At the query's latency deadline the combine function is
+invoked with the subset of predictions that arrived; missing models are
+mean-substituted and the confidence score communicates the loss of ensemble
+width. The masked math lives here (pure / jittable); the deadline scheduling
+lives in the serving engine and frontend."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def assemble_preds(model_ids: Sequence[str], preds: Dict[str, Any]
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stack per-model predictions into [k, ...], mean-substituting missing
+    models (paper: 'we substitute missing predictions with their average
+    value'). Returns (matrix, available mask)."""
+    available = np.asarray([m in preds for m in model_ids])
+    if not available.any():
+        raise ValueError("no predictions available at deadline")
+    vals = [np.asarray(preds[m], dtype=np.float32)
+            for m in model_ids if m in preds]
+    mean = np.mean(vals, axis=0)
+    rows = [np.asarray(preds[m], np.float32) if m in preds else mean
+            for m in model_ids]
+    return jnp.asarray(np.stack(rows)), jnp.asarray(available)
+
+
+def agreement_confidence(preds_matrix: jnp.ndarray,
+                         available: jnp.ndarray) -> float:
+    """Fraction of available models that agree with the plurality vote."""
+    votes = jnp.argmax(preds_matrix, axis=-1)
+    combined = jnp.argmax(
+        jnp.mean(jnp.where(available[:, None], preds_matrix, 0.0), axis=0))
+    agree = (votes == combined) & available
+    return float(agree.sum() / jnp.maximum(available.sum(), 1))
+
+
+class DeadlineTracker:
+    """Book-keeping for per-query deadlines in the serving loop."""
+
+    def __init__(self, slo: float):
+        self.slo = slo
+
+    def deadline_for(self, arrival_time: float) -> float:
+        return arrival_time + self.slo
+
+    def expired(self, arrival_time: float, now: float) -> bool:
+        return now >= self.deadline_for(arrival_time)
+
+    def remaining(self, arrival_time: float, now: float) -> float:
+        return max(0.0, self.deadline_for(arrival_time) - now)

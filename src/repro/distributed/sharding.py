@@ -1,0 +1,129 @@
+"""Logical-axis sharding: model code annotates tensors with *logical* axis
+names; a rules table maps them to mesh axes (MaxText-style). With no active
+context (CPU unit tests) annotations are no-ops.
+
+Rules used in production (DESIGN.md §6):
+    batch   -> ('pod', 'data')   [or ('data',) single-pod]
+    fsdp    -> 'data'            (train param sharding; None at serve)
+    heads/kv_heads/ffn/vocab/expert -> 'model'
+    embed/seq/state -> None      (replicated dims)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+class ShardingContext:
+    def __init__(self, mesh: Mesh, rules: Dict[str, AxisVal]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        out = []
+        used = set()
+        for ax in logical_axes:
+            m = self.rules.get(ax) if ax else None
+            # a mesh axis may appear at most once in a PartitionSpec
+            if m is not None:
+                flat = (m,) if isinstance(m, str) else tuple(m)
+                flat = tuple(a for a in flat if a not in used and a in self.mesh.axis_names)
+                used.update(flat)
+                m = flat if len(flat) > 1 else (flat[0] if flat else None)
+            out.append(m)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes))
+
+
+def current() -> Optional[ShardingContext]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Dict[str, AxisVal]):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = ShardingContext(mesh, rules)
+    try:
+        yield _state.ctx
+    finally:
+        _state.ctx = prev
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate an intermediate with logical axes (no-op without context)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# standard rule tables
+# ---------------------------------------------------------------------------
+
+def train_rules(multi_pod: bool) -> Dict[str, AxisVal]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "fsdp": "data",
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_ffn": None,
+        "embed": None,
+        "seq": None,
+        "state": None,
+        "users": batch,
+    }
+
+
+def strip_pod(rules: Dict[str, AxisVal]) -> Dict[str, AxisVal]:
+    """Remove the pod axis from batch-like rules — used when the pod dim is
+    handled manually by the cross-pod gradient shard_map (train path)."""
+    out = dict(rules)
+    for k in ("batch", "users"):
+        v = out.get(k)
+        if isinstance(v, tuple):
+            v = tuple(a for a in v if a != "pod")
+            out[k] = v if v else None
+        elif v == "pod":
+            out[k] = None
+    return out
+
+
+def norm_axes(v: AxisVal) -> Tuple[str, ...]:
+    if v is None:
+        return ()
+    return (v,) if isinstance(v, str) else tuple(v)
+
+
+def serve_rules(multi_pod: bool, shard_experts_2d: bool = False) -> Dict[str, AxisVal]:
+    rules = train_rules(multi_pod)
+    rules["fsdp"] = None          # weights replicated over data at serve
+    if shard_experts_2d:          # kimi-scale MoE: expert d_ff also over data
+        rules["expert_ffn"] = "data"
+    return rules
+
+
+def params_shardings(axes_tree, ctx: ShardingContext):
+    """Map a tree of logical-axes tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: ctx.sharding(axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x),
+    )

@@ -1,0 +1,104 @@
+"""Pallas TPU decode attention (single-token GQA vs a long KV cache).
+
+The decode hot loop is memory-bound: one query token must stream the whole
+(per-sample) KV cache from HBM once. Grid (B, Hkv, nK): all G query heads
+sharing a kv head are processed together as a [G, D] block so each K/V tile
+is read exactly once per kv head (the GQA bandwidth win). Per-sample valid
+lengths arrive via scalar prefetch (SMEM) and mask the tail tile."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, k_blk: int, nk: int, window: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    k_lo = ki * k_blk
+    live = k_lo < length
+    if window > 0:
+        live = live & (k_lo + k_blk > length - window)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)                # [k_blk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, kb]
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < length
+        if window > 0:
+            mask &= cols >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)                # [k_blk, D]
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
+                     k_blk: int = 256, scale=None, interpret: bool = False):
+    """q: [B, Hq, D]; k/v_cache: [B, Hkv, Smax, D]; lengths: [B] ->
+    [B, Hq, D]."""
+    B, Hq, D = q.shape
+    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    k_blk = min(k_blk, Smax)
+    assert Smax % k_blk == 0
+    nk = Smax // k_blk
+    scale = scale or 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_kernel, scale=scale, k_blk=k_blk, nk=nk,
+                               window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, k_blk, D), lambda b, h, ki, lens: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, k_blk, D), lambda b, h, ki, lens: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths, qg, k_cache.reshape(B, Hkv, Smax, D),
+      v_cache.reshape(B, Hkv, Smax, D))
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for decode_attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, window: int = 0,
+                         scale=None):
+    """q: [B, Hq, D]; k/v_cache: [B, Hkv, Smax, D]; lengths: [B] ->
+    [B, Hq, D]."""
+    B, Hq, D = q.shape
+    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale or 1.0 / math.sqrt(D)
+    k = jnp.repeat(k_cache, G, axis=1)
+    v = jnp.repeat(v_cache, G, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    cols = jnp.arange(Smax)[None, None, :]
+    mask = cols < lengths[:, None, None]
+    if window > 0:
+        mask &= cols >= (lengths[:, None, None] - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

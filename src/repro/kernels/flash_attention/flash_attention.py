@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (prefill hot path).
+
+Grid (B, Hq, nQ, nK) — TPU grids iterate sequentially with the last dim
+innermost, so the online-softmax state for one (b, h, qi) lives in VMEM
+scratch across the nK inner iterations. BlockSpecs tile Q/K/V into VMEM
+with MXU-aligned (multiple-of-128 recommended) block shapes; GQA is handled
+in the K/V index maps (q head h reads kv head h // group).
+
+Causal block skipping: blocks strictly above the diagonal contribute
+nothing; `pl.when` guards the whole update so the MXU never sees them."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, q_blk: int, k_blk: int, nk: int,
+            window: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = qi * q_blk
+    k_lo = ki * k_blk
+    # is any (row, col) pair in this block unmasked?
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (k_lo <= q_lo + q_blk - 1)
+    if window > 0:
+        live = live & (k_lo + k_blk - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # [q_blk, d]
+        k = k_ref[0, 0].astype(jnp.float32)              # [k_blk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 1)
+        mask = jnp.ones((q_blk, k_blk), jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_blk: int = 128, k_blk: int = 128,
+                    scale=None, interpret: bool = False):
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Sk, D] -> [B, Hq, Sq, D]."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    q_blk = min(q_blk, Sq)
+    k_blk = min(k_blk, Sk)
+    assert Sq % q_blk == 0 and Sk % k_blk == 0
+    nq, nk = Sq // q_blk, Sk // k_blk
+    scale = scale or 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, q_blk=q_blk, k_blk=k_blk,
+        nk=nk, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, k_blk, D),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, k_blk, D),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_blk, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, D), jnp.float32),   # acc
+            pltpu.VMEM((q_blk,), jnp.float32),     # running max m
+            pltpu.VMEM((q_blk,), jnp.float32),     # running sum l
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,29 @@
+"""Jitted public wrapper for the flash attention kernel.
+
+Accepts the model-layout tensors ([B, S, H, D]) used across repro.models and
+handles the [B, H, S, D] kernel layout + GQA plumbing. On CPU containers
+pass interpret=True (kernel body executes in Python); on TPU the same call
+compiles to Mosaic."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_blk",
+                                             "k_blk", "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       q_blk: int = 128, k_blk: int = 128,
+                       interpret: bool = False):
+    """q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, Hq, D]."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = flash_attention(qt, kt, vt, causal=causal, window=window,
+                        q_blk=q_blk, k_blk=k_blk, interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)

@@ -1,0 +1,23 @@
+"""Jitted public wrapper for the fused RMSNorm kernel (any leading dims)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "row_blk", "interpret"))
+def rmsnorm_op(x, w, *, eps: float = 1e-5, row_blk: int = 256,
+               interpret: bool = False):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    n = x2.shape[0]
+    blk = row_blk
+    while n % blk:
+        blk //= 2
+    y = rmsnorm(x2, w, eps=eps, row_blk=max(1, blk), interpret=interpret)
+    return y.reshape(shape)

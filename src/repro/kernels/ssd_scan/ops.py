@@ -1,0 +1,24 @@
+"""Jitted public wrapper for ssd_scan (model layout [B,S,H,*])."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_op(q, k, v, log_f, log_i, *, chunk: int = 128,
+                interpret: bool = False):
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_f/log_i: [B,S,H] ->
+    (y [B,S,H,dv], final_state [B,H,dk,dv]) — drop-in for
+    repro.models.linear_core.chunked_linear_attention."""
+    tobh = lambda x: jnp.swapaxes(x, 1, 2)
+    y, state = ssd_scan(tobh(q), tobh(k), tobh(v),
+                        jnp.swapaxes(log_f, 1, 2),
+                        jnp.swapaxes(log_i, 1, 2),
+                        chunk=chunk, interpret=interpret)
+    return jnp.swapaxes(y, 1, 2), state

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for ssd_scan — delegates to the model-internal chunked
+linear-attention core (which is itself tested against a stepwise recurrence
+in tests/test_linear_core.py), with the [B,H,S,*] kernel layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.linear_core import chunked_linear_attention
+
+
+def ssd_scan_ref(q, k, v, log_f, log_i, *, chunk: int = 128):
+    """q,k: [B,H,S,dk]; v: [B,H,S,dv]; gates [B,H,S] ->
+    (y [B,H,S,dv], state [B,H,dk,dv])."""
+    tohsd = lambda x: jnp.swapaxes(x, 1, 2)      # [B,S,H,*]
+    y, state = chunked_linear_attention(
+        tohsd(q), tohsd(k), tohsd(v),
+        jnp.swapaxes(log_f, 1, 2), jnp.swapaxes(log_i, 1, 2),
+        chunk=chunk)
+    return jnp.swapaxes(y, 1, 2), state

@@ -1,0 +1,91 @@
+"""Pallas TPU chunked linear-attention scan (the mLSTM / mamba-SSD hot path).
+
+The recurrence S_t = f_t·S + i_t·k_t v_tᵀ, y_t = q_t·S_t is computed in
+chunkwise-parallel form (models/linear_core.py is the jnp twin): grid
+(B, H, n_chunks) with the chunk dim innermost — TPU grids iterate
+sequentially, so the [dk, dv] matrix state lives in VMEM scratch across
+chunks. Per chunk everything is MXU work: one [W,W] decay-masked score
+matmul + two state matmuls. Log-space decay ratios are <= 0 before exp, so
+fp32 scratch is stable at any sequence length — this is what makes
+long_500k run as a sequence of W-sized tiles with O(dk·dv) carried state."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, f_ref, i_ref, y_ref, s_out_ref, state_ref,
+            *, nc: int, W: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [W, dk]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)          # [W, dv]
+    log_f = f_ref[0, 0].astype(jnp.float32)      # [W]
+    log_i = i_ref[0, 0].astype(jnp.float32)
+    cum = jnp.cumsum(log_f)                      # inclusive
+
+    # inter-chunk: contribution of the carried state
+    y_state = (q * jnp.exp(cum)[:, None]) @ state_ref[...]
+    # intra-chunk: decay-masked scores
+    s = q @ k.T                                  # [W, W]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (W, W), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (W, W), 1)
+    decay = cum[:, None] - cum[None, :] + log_i[None, :]
+    decay = jnp.where(rows >= cols, decay, -jnp.inf)
+    y = y_state + (s * jnp.exp(decay)) @ v
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update
+    tot = cum[-1]
+    k_scaled = k * jnp.exp(tot - cum + log_i)[:, None]
+    state_ref[...] = state_ref[...] * jnp.exp(tot) + k_scaled.T @ v
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        s_out_ref[0, 0] = state_ref[...].astype(s_out_ref.dtype)
+
+
+def ssd_scan(q, k, v, log_f, log_i, *, chunk: int = 128,
+             interpret: bool = False):
+    """q,k: [B,H,S,dk]; v: [B,H,S,dv]; log_f/log_i: [B,H,S] (log_f <= 0).
+
+    Returns (y [B,H,S,dv], final_state [B,H,dk,dv] fp32)."""
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    W = min(chunk, S)
+    assert S % W == 0, (S, W)
+    nc = S // W
+
+    kernel = functools.partial(_kernel, nc=nc, W=W)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, W, dk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, W, dk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, W, dv), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, W), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, W), lambda b, h, c: (b, h, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, W, dv), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, dv), q.dtype),
+            jax.ShapeDtypeStruct((B, H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_f, log_i)
+    return y, state

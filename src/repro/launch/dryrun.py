@@ -1,0 +1,135 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder-device flag before ANY other import (jax locks the
+device count on first init)."""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs.base import applicable_shapes  # noqa: E402
+from repro.configs.registry import ARCHITECTURES, get_config, get_shape  # noqa: E402
+from repro.launch import hlo_stats  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_step  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             step_opts=None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "devices": int(len(jax.devices())),
+        "step_opts": dict(step_opts or {}),
+    }
+    t0 = time.time()
+    try:
+        with mesh:
+            bundle = build_step(cfg, shape, mesh, **(step_opts or {}))
+            lowered = bundle.fn.lower(*bundle.arg_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            txt = compiled.as_text()
+            if shape.kind == "prefill":
+                k_block = (step_opts or {}).get("k_block", 1024)
+                default_trip = max(1, (shape.seq_len // k_block + 1) // 2)
+            else:
+                default_trip = 1
+            hs = hlo_stats.analyze_hlo(txt, total_devices=len(jax.devices()),
+                                       default_trip=default_trip)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "meta": bundle.meta,
+            "memory_analysis": {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "code_bytes": int(ma.generated_code_size_in_bytes),
+            },
+            "cost_analysis": {
+                "flops_body_once": float(ca.get("flops", 0.0)),
+                "bytes_accessed_body_once": float(ca.get("bytes accessed", 0.0)),
+            },
+            "hlo": hs.to_dict(),
+            "hlo_text_bytes": len(txt),
+            "default_trip": default_trip,
+        })
+        if verbose:
+            mb = 1 / (1 << 20)
+            print(f"OK  {arch} x {shape_name} x {rec['mesh']}: "
+                  f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+                  f"args {ma.argument_size_in_bytes * mb:.0f}MB "
+                  f"temp {ma.temp_size_in_bytes * mb:.0f}MB | "
+                  f"coll {hs.total_collective_bytes * mb:.1f}MB | "
+                  f"dotF {hs.dot_flops:.3e}")
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc(limit=20),
+                    "elapsed_s": round(time.time() - t0, 2)})
+        if verbose:
+            print(f"FAIL {arch} x {shape_name} x {rec['mesh']}: {rec['error']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells that already have results")
+    ap.add_argument("--tag", default="baseline",
+                    help="variant tag for §Perf iterations")
+    ap.add_argument("--opts", default="{}",
+                    help="JSON step opts (e.g. remat, q_block, optimizer)")
+    args = ap.parse_args()
+
+    outdir = Path(args.out) / args.tag
+    outdir.mkdir(parents=True, exist_ok=True)
+    step_opts = json.loads(args.opts)
+
+    archs = sorted(ARCHITECTURES) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([s.name for s in applicable_shapes(cfg)]
+                  if args.shape == "all" else args.shape.split(","))
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_tag = "multi" if multi else "single"
+                path = outdir / f"{arch}__{shape_name}__{mesh_tag}.json"
+                if path.exists() and not args.force:
+                    prev = json.loads(path.read_text())
+                    if prev.get("ok"):
+                        n_skip += 1
+                        continue
+                rec = run_cell(arch, shape_name, multi, step_opts=step_opts)
+                path.write_text(json.dumps(rec, indent=1))
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"\ndone: {n_ok} ok, {n_fail} fail, {n_skip} cached")
+
+
+if __name__ == "__main__":
+    main()

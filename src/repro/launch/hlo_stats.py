@@ -1,0 +1,233 @@
+"""Parse compiled (post-SPMD) HLO text for roofline inputs.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE regardless of trip
+count (verified empirically — see EXPERIMENTS.md §Methodology), so anything
+inside ``lax.scan``/``fori_loop`` is undercounted. This parser rebuilds
+per-device totals:
+
+* collective bytes by op type (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute), using ring-algorithm wire-byte models,
+* dot FLOPs (matmuls, including those inside fusions),
+* each multiplied by the product of enclosing while-loop trip counts
+  (constant bounds parsed from loop conditions; data-dependent bounds fall
+  back to caller-supplied estimates).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALL_ATTR_RE = re.compile(r"(?:condition|body|calls|to_apply)=%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of possibly-tuple HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # op name -> type str
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    current: Optional[Computation] = None
+    header = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            m = header.match(line.strip())
+            if m:
+                current = Computation(m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        current.lines.append(line)
+        dm = _DEF_RE.match(line)
+        if dm:
+            rest = dm.group(2)
+            tm = re.match(r"((?:\([^)]*\))|(?:[\w\[\],{}]+))\s", rest)
+            if tm:
+                current.shapes[dm.group(1)] = tm.group(1)
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Constant loop bound from a while condition (None if data-dependent)."""
+    consts = []
+    has_compare = False
+    for line in cond.lines:
+        if "compare(" in line or "wrapped_compare" in line:
+            has_compare = True
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            consts.append(int(m.group(1)))
+    if has_compare and consts:
+        return max(consts)
+    return None
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _operand_names(line: str) -> List[str]:
+    m = re.search(r"\w[\w\-]*\(([^)]*)\)", line)
+    if not m:
+        return []
+    return re.findall(r"%([\w.\-]+)", m.group(1))
+
+
+@dataclass
+class HloStats:
+    collective_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    dot_flops: float = 0.0
+    unknown_trip_whiles: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    def to_dict(self):
+        return {
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "total_collective_bytes": self.total_collective_bytes,
+            "dot_flops": self.dot_flops,
+            "unknown_trip_whiles": self.unknown_trip_whiles,
+        }
+
+
+def analyze_hlo(hlo: str, *, total_devices: int,
+                default_trip: int = 1) -> HloStats:
+    """Per-device collective bytes + dot flops with loop-trip multipliers.
+
+    default_trip: multiplier assumed for while loops whose bound is
+    data-dependent (e.g. causal fori_loop attention) — callers pass the
+    analytically-known average trip count."""
+    comps, entry = _parse_computations(hlo)
+    stats = HloStats()
+    if entry is None:
+        return stats
+
+    def dims_product(dims_str: str) -> int:
+        n = 1
+        if dims_str:
+            for d in dims_str.split(","):
+                n *= int(d)
+        return n
+
+    def visit(comp_name: str, mult: float, seen: Tuple[str, ...]):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen:
+            return
+        seen = seen + (comp_name,)
+        for line in comp.lines:
+            # --- while loops ---
+            if re.search(r"\bwhile\(", line):
+                attrs = dict(re.findall(r"(condition|body)=%([\w.\-]+)", line))
+                trip = None
+                if "condition" in attrs and attrs["condition"] in comps:
+                    trip = _trip_count(comps[attrs["condition"]])
+                if trip is None:
+                    trip = default_trip
+                    stats.unknown_trip_whiles += 1
+                if "body" in attrs:
+                    visit(attrs["body"], mult * trip, seen)
+                continue
+            # --- calls into fusions / custom computations ---
+            for sub in _CALL_ATTR_RE.findall(line):
+                if sub in comps and "while(" not in line:
+                    visit(sub, mult, seen)
+            # --- collectives ---
+            low = line.lstrip()
+            for coll in COLLECTIVES:
+                if re.search(rf"\b{coll}\(", low) and "-start(" not in low \
+                        and "-done(" not in low:
+                    dm = _DEF_RE.match(line)
+                    if not dm:
+                        continue
+                    result_bytes = _shape_bytes(
+                        comp.shapes.get(dm.group(1), ""))
+                    g = _group_size(line, total_devices)
+                    frac = (g - 1) / g if g > 1 else 0.0
+                    if coll == "all-gather":
+                        wire = result_bytes * frac
+                    elif coll == "all-reduce":
+                        wire = 2.0 * result_bytes * frac
+                    elif coll in ("reduce-scatter", "all-to-all"):
+                        ops = _operand_names(line)
+                        op_bytes = sum(_shape_bytes(comp.shapes.get(o, ""))
+                                       for o in ops) or result_bytes
+                        wire = op_bytes * frac
+                    else:  # collective-permute
+                        wire = result_bytes
+                    stats.collective_bytes[coll] += wire * mult
+                    stats.collective_counts[coll] += 1
+                    break
+            # --- dots ---
+            if re.search(r"\bdot\(", low):
+                dm = _DEF_RE.match(line)
+                if not dm:
+                    continue
+                rm = _SHAPE_RE.search(comp.shapes.get(dm.group(1), ""))
+                if not rm:
+                    continue
+                out_elems = dims_product(rm.group(2))
+                ops = _operand_names(line)
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                contracted = 1
+                if ops and cm and ops[0] in comp.shapes:
+                    lhs = _SHAPE_RE.search(comp.shapes[ops[0]])
+                    if lhs:
+                        ldims = ([int(x) for x in lhs.group(2).split(",")]
+                                 if lhs.group(2) else [])
+                        for ci in (cm.group(1).split(",") if cm.group(1) else []):
+                            ci = int(ci)
+                            if ci < len(ldims):
+                                contracted *= ldims[ci]
+                stats.dot_flops += 2.0 * out_elems * contracted * mult
+
+    visit(entry, 1.0, ())
+    return stats

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, no device allocation).
+
+For modality-stub archs (vlm/audio) the frontend output arrives as
+precomputed embeddings per DESIGN.md §4."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        S_dec = S // cfg.decoder_ratio
+        return {
+            "frames": _sds((B, S, cfg.d_model), F32),
+            "tokens": _sds((B, S_dec), I32),
+            "labels": _sds((B, S_dec), I32),
+        }
+    if cfg.frontend == "vision":
+        P = cfg.num_prefix_embeddings
+        S_text = S - P
+        return {
+            "prefix_embeddings": _sds((B, P, cfg.d_model), F32),
+            "tokens": _sds((B, S_text), I32),
+            "labels": _sds((B, S_text), I32),
+        }
+    return {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b = train_batch_specs(cfg, shape)
+    b.pop("labels", None)
+    return b
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Any, Any]:
+    """(tokens [B,1], lengths [B]) for serve_decode."""
+    B = shape.global_batch
+    return _sds((B, 1), I32), _sds((B,), I32)
+
+
+def batch_axes_tree(batch_specs: Dict[str, Any]):
+    """Logical axes for each batch input (batch dim sharded, rest replicated)."""
+    out = {}
+    for k, v in batch_specs.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def make_concrete(batch_specs: Dict[str, Any], rng=None, vocab: int = 1000):
+    """Materialize small concrete batches for smoke tests."""
+    import numpy as np
+    r = np.random.default_rng(0)
+    out = {}
+    for k, v in batch_specs.items():
+        if v.dtype == I32:
+            out[k] = jnp.asarray(r.integers(0, vocab, v.shape), I32)
+        else:
+            out[k] = jnp.asarray(r.normal(size=v.shape) * 0.02, F32)
+    return out

@@ -1,0 +1,32 @@
+"""Mesh construction. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests/benches (defaults to the single real device)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_elastic_mesh(model_parallelism: int = 16):
+    """Build the largest (data, model) mesh the visible devices support —
+    elastic scaling: the same launcher works at any device count."""
+    n = len(jax.devices())
+    model = min(model_parallelism, n)
+    while n % model:
+        model -= 1
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

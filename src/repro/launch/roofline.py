@@ -1,0 +1,235 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, three per-chip time terms:
+
+    T_compute = HLO_dot_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+    T_memory  = (argument + output bytes) / HBM_bw    (819 GB/s)
+    T_coll    = collective wire bytes / link_bw       (50 GB/s per link)
+
+Sources & corrections (verified in tests/test_hlo_stats.py):
+  * FLOPs come from the HLO dot parser with while-loop trip-count
+    multiplication — XLA's cost_analysis() counts scan bodies once and is
+    reported only as a cross-reference.
+  * Memory traffic uses memory_analysis() argument+output bytes — the
+    perfect-fusion lower bound on HBM traffic (weights/caches/optimizer
+    state read once, outputs written once); temp bytes are reported as
+    footprint, not traffic.
+  * Collective bytes are ring-model wire bytes per device, trip-multiplied.
+
+MODEL_FLOPS (the "useful" numerator) = 6·N_active·tokens (train) or
+2·N_active·tokens (serve), logical (unpadded) parameter counts.
+
+roofline_fraction = ideal_time / bound_time, where
+    ideal_time = max(MODEL_FLOPS_per_chip / peak, T_memory)
+    bound_time = max(T_compute, T_memory, T_coll)
+(T_memory appears in both because argument+output traffic is already the
+idealized floor — a fraction of 1.0 means no wasted compute and no
+collective bottleneck beyond the intrinsic memory floor.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.registry import ARCHITECTURES
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_coll: float
+    model_flops_chip: float
+    hlo_flops_chip: float
+    ideal_bytes_chip: float
+    temp_gb: float
+    args_gb: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return (self.model_flops_chip / self.hlo_flops_chip
+                if self.hlo_flops_chip else 0.0)
+
+    @property
+    def ideal_time(self) -> float:
+        return max(self.model_flops_chip / PEAK_FLOPS,
+                   self.ideal_bytes_chip / HBM_BW)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_coll)
+
+    @property
+    def fraction(self) -> float:
+        return self.ideal_time / self.bound_time if self.bound_time else 0.0
+
+    def advice(self) -> str:
+        d = self.dominant
+        if d == "collective":
+            return ("reduce cross-device traffic: fewer FSDP regathers / "
+                    "all_to_all dispatch instead of token gather / "
+                    "compressed reductions")
+        if d == "compute" and self.useful_ratio < 0.5:
+            return ("cut wasted FLOPs: causal block skipping, less remat "
+                    "recompute, tighter MoE capacity, unpadded heads")
+        if d == "compute":
+            return "compute-bound near useful FLOPs: scale batch or chips"
+        return ("memory-bound: shrink resident state (split-scan window "
+                "caches, quantized KV, Adafactor) or raise arithmetic "
+                "intensity (bigger batch)")
+
+
+def ideal_bytes_per_chip(arch: str, shape_name: str, chips: int) -> float:
+    """Analytic HBM-traffic floor per chip using *logical* (unpadded) state:
+    what a perfect implementation would move. Decode: active weights + the
+    logical KV/recurrent state (window-bounded where the arch allows).
+    Prefill: weights + logical cache written. Train: full optimizer-state
+    read+write (28 B/param: bf16 p r/w + fp32 master/m/v r/w)."""
+    cfg = ARCHITECTURES[arch]
+    shape = SHAPES_BY_NAME[shape_name]
+    n = cfg.param_count()
+    n_active = cfg.active_param_count()
+    S, B = shape.seq_len, shape.global_batch
+    hd = cfg.resolved_head_dim
+
+    def cache_bytes(seq: int) -> float:
+        per_layer = []
+        for li in range(cfg.num_layers):
+            if cfg.family == "ssm":
+                per_layer.append(2 * cfg.num_heads * (2 * cfg.d_model // cfg.num_heads) ** 2 * 4)
+                continue
+            w = cfg.window if (cfg.window and li not in cfg.global_layers) else 0
+            eff = min(seq, w) if w else seq
+            per_layer.append(2 * eff * cfg.num_kv_heads * hd * 2)   # bf16 K+V
+        if cfg.is_encoder_decoder:
+            cross = 2 * seq * cfg.num_kv_heads * hd * 2
+            self_ = 2 * (seq // cfg.decoder_ratio) * cfg.num_kv_heads * hd * 2
+            return B * cfg.num_layers * (cross + self_)
+        return B * sum(per_layer)
+
+    if shape.kind == "train":
+        return 28.0 * n / chips
+    if shape.kind == "prefill":
+        return (2.0 * n + cache_bytes(S)) / chips
+    return (2.0 * n_active + cache_bytes(S)) / chips
+
+
+def model_flops_per_chip(arch: str, shape_name: str, chips: int) -> float:
+    cfg = ARCHITECTURES[arch]
+    shape = SHAPES_BY_NAME[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.is_encoder_decoder:
+            tokens = shape.global_batch * (shape.seq_len
+                                           + shape.seq_len // cfg.decoder_ratio)
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    tokens = shape.global_batch           # one token per sequence
+    return 2.0 * n_active * tokens / chips
+
+
+def load_cell(path: Path) -> Optional[CellRoofline]:
+    rec = json.loads(path.read_text())
+    if not rec.get("ok"):
+        return None
+    chips = rec["devices"]
+    ma = rec["memory_analysis"]
+    traffic = ma["argument_bytes"] + ma["output_bytes"]
+    hlo_flops = rec["hlo"]["dot_flops"]
+    coll = rec["hlo"]["total_collective_bytes"]
+    return CellRoofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], chips=chips,
+        t_compute=hlo_flops / PEAK_FLOPS,
+        t_memory=traffic / HBM_BW,
+        t_coll=coll / LINK_BW,
+        model_flops_chip=model_flops_per_chip(rec["arch"], rec["shape"],
+                                              chips),
+        hlo_flops_chip=hlo_flops,
+        ideal_bytes_chip=ideal_bytes_per_chip(rec["arch"], rec["shape"],
+                                              chips),
+        temp_gb=ma["temp_bytes"] / 1e9,
+        args_gb=ma["argument_bytes"] / 1e9,
+    )
+
+
+def load_all(dryrun_dir: str, mesh: str = "single") -> List[CellRoofline]:
+    tag = "single" if mesh == "single" else "multi"
+    cells = []
+    for p in sorted(Path(dryrun_dir).glob(f"*__{tag}.json")):
+        c = load_cell(p)
+        if c:
+            cells.append(c)
+    return cells
+
+
+def fmt_ms(t: float) -> str:
+    if t >= 1.0:
+        return f"{t:.2f}s"
+    return f"{t*1e3:.2f}ms"
+
+
+def table(cells: List[CellRoofline]) -> str:
+    hdr = ("| arch | shape | T_comp | T_mem | T_coll | dominant | "
+           "useful/HLO | frac | state GB/chip | note |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for c in cells:
+        lines.append(
+            f"| {c.arch} | {c.shape} | {fmt_ms(c.t_compute)} | "
+            f"{fmt_ms(c.t_memory)} | {fmt_ms(c.t_coll)} | **{c.dominant}** | "
+            f"{c.useful_ratio:.2f} | {c.fraction:.2f} | {c.args_gb:.1f} | "
+            f"{c.advice()[:48]} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun/baseline")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    cells = load_all(args.dryrun, args.mesh)
+    print(table(cells))
+    worst = sorted(cells, key=lambda c: c.fraction)[:5]
+    print("\nworst roofline fractions (hillclimb candidates):")
+    for c in worst:
+        print(f"  {c.arch} x {c.shape}: frac={c.fraction:.3f} "
+              f"dominant={c.dominant} — {c.advice()}")
+    coll_bound = sorted(cells, key=lambda c: -c.t_coll / max(c.bound_time, 1e-12))[:5]
+    print("\nmost collective-bound:")
+    for c in coll_bound:
+        print(f"  {c.arch} x {c.shape}: T_coll={fmt_ms(c.t_coll)} "
+              f"({c.t_coll/max(c.bound_time,1e-12)*100:.0f}% of bound)")
+    if args.json:
+        out = [dict(arch=c.arch, shape=c.shape, mesh=c.mesh,
+                    t_compute=c.t_compute, t_memory=c.t_memory,
+                    t_coll=c.t_coll, dominant=c.dominant,
+                    useful_ratio=c.useful_ratio, fraction=c.fraction)
+               for c in cells]
+        Path(args.json).write_text(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Step-function factory shared by the trainer, serving engine and dry-run.
+
+For each (arch, shape) cell this builds the *exact* jitted function the
+production system would execute, with explicit in/out shardings — the dry-run
+lowers these against ShapeDtypeStructs; the trainer/engine call them with
+real arrays. One code path, no divergence."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, suggest_microbatches
+from repro.distributed.sharding import (
+    ShardingContext, params_shardings, serve_rules, sharding_context,
+    train_rules,
+)
+from repro.launch.inputs import (
+    batch_axes_tree, decode_input_specs, prefill_batch_specs,
+    train_batch_specs,
+)
+from repro.models.api import Model, build_model
+
+
+def rules_for(cfg: ModelConfig, kind: str, multi_pod: bool,
+              moe_mode: Optional[str] = None) -> Dict[str, Any]:
+    """moe_mode (serve, big MoE only):
+      '2d'     — experts x model, d_ff x data; tokens gathered over data
+                 (baseline; right for decode where tokens are tiny)
+      'gather' — experts x model, d_model x data (FSDP-style storage);
+                 expert *weights* gathered per layer (the §Perf fix for
+                 prefill, where token bytes >> expert-slice bytes)."""
+    if kind == "train":
+        return train_rules(multi_pod)
+    # MoE whose model-sharded experts exceed ~half of HBM needs a second
+    # sharding dimension at serve (DESIGN.md §6)
+    expert_bytes_tp = (cfg.num_layers * cfg.num_experts * 3 * cfg.d_model
+                       * cfg.d_ff * 2 / 16)
+    big_moe = expert_bytes_tp > 8e9
+    if not big_moe:
+        return serve_rules(multi_pod, shard_experts_2d=False)
+    if (moe_mode or "2d") == "2d":
+        return serve_rules(multi_pod, shard_experts_2d=True)
+    rules = serve_rules(multi_pod, shard_experts_2d=False)
+    rules["fsdp"] = "data"          # gather-weights mode
+    return rules
+
+
+def fit_batch_sharding(rules: Dict[str, Any], mesh, global_batch: int
+                       ) -> Dict[str, Any]:
+    """Drop batch-sharding axes that don't divide the global batch (e.g.
+    long_500k's global_batch=1 cannot shard over 16 data shards)."""
+    axes = rules.get("batch")
+    axes = tuple(a for a in ((axes,) if isinstance(axes, str) else (axes or ()))
+                 if a in mesh.shape)
+
+    def fits(t):
+        n = 1
+        for a in t:
+            n *= mesh.shape[a]
+        return n and global_batch % n == 0
+
+    while axes and not fits(axes):
+        axes = axes[:-1]
+    rules = dict(rules)
+    rules["batch"] = axes or None
+    rules["users"] = rules["batch"]
+    return rules
+
+
+def _axes_sh(ctx: ShardingContext, axes_tree_):
+    return jax.tree.map(lambda ax: ctx.sharding(ax), axes_tree_,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(a is None or isinstance(a, str) for a in x))
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A jitted step + everything needed to lower or call it."""
+    fn: Any                       # jitted callable
+    arg_specs: Tuple[Any, ...]    # ShapeDtypeStructs for .lower(*arg_specs)
+    model: Model
+    rules: Dict[str, Any]
+    meta: Dict[str, Any]
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                     optimizer: str = "adamw", remat: str = "full",
+                     pod_compress: bool = True,
+                     sequence_parallel: bool = False,
+                     dp_major: bool = False,
+                     num_microbatches: Optional[int] = None) -> StepBundle:
+    from repro.training.train_loop import TrainConfig, jit_train_step
+
+    multi_pod = "pod" in mesh.shape
+    rules = fit_batch_sharding(rules_for(cfg, "train", multi_pod), mesh,
+                               shape.global_batch)
+    if sequence_parallel:
+        # §Perf: residual stream seq-sharded over model (Megatron-SP style,
+        # via XLA's partitioner) — remat'd block inputs shrink 16x, so one
+        # big microbatch replaces many (16x fewer FSDP weight regathers)
+        rules["seq"] = "model"
+    if dp_major:
+        # §Perf: batch sharded over data x model (1 sample/chip at gb=256)
+        # — no TP activation all-reduces at all; dense weights 2-D sharded
+        # and gathered per layer; MoE gathers tokens over the model column
+        # (moe._moe_body_ep gather_model path). The spec-dedupe in
+        # sharding.py keeps expert tensors at (model, data) automatically.
+        # Only worthwhile when TP-activation bytes dominate weight bytes —
+        # it REGRESSES small replicated models (xlstm: 5x worse; §Perf).
+        nshards = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
+        fsdp_axes = (("data", "model") if cfg.d_model % nshards == 0
+                     else ("data",))   # divisibility fallback (e.g. d=960)
+        rules.update(batch=("pod", "data", "model") if multi_pod
+                     else ("data", "model"),
+                     fsdp=fsdp_axes,
+                     heads=None, kv_heads=None, ffn=None, vocab=None)
+        rules = fit_batch_sharding(rules, mesh, shape.global_batch)
+    # the model only ever sees per-pod batches (the cross-pod dim is handled
+    # by the gradient shard_map), so its internal rules are pod-free
+    from repro.distributed.sharding import strip_pod
+    rules_model = strip_pod(rules) if multi_pod else rules
+    model = build_model(cfg, mesh, rules_model, remat=remat)
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    nmb = num_microbatches or suggest_microbatches(cfg, shape, dp)
+    tc = TrainConfig(num_microbatches=nmb, optimizer=optimizer,
+                     pod_compress=pod_compress)
+    batch_specs = train_batch_specs(cfg, shape)
+    step, opt_init, sh, batch_sh = jit_train_step(model, mesh, rules_model, tc,
+                                                  batch_specs,
+                                                  batch_rules=rules)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(opt_init, params_shape)
+    return StepBundle(
+        fn=step,
+        arg_specs=(params_shape, opt_shape, batch_specs),
+        model=model, rules=rules,
+        meta={"kind": "train", "num_microbatches": nmb, "optimizer": optimizer,
+              "remat": remat},
+    )
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                       remat: str = "none", max_len: Optional[int] = None,
+                       q_block: int = 512, k_block: int = 1024,
+                       moe_mode: Optional[str] = "gather",
+                       context_parallel: bool = False) -> StepBundle:
+    multi_pod = "pod" in mesh.shape
+    rules = fit_batch_sharding(
+        rules_for(cfg, "serve", multi_pod, moe_mode=moe_mode), mesh,
+        shape.global_batch)
+    if context_parallel:
+        rules["seq"] = "model"      # §Perf: context-parallel dense prefill
+    model = build_model(cfg, mesh, rules, remat=remat,
+                        q_block=q_block, k_block=k_block)
+    ctx = ShardingContext(mesh, rules)
+    batch_specs = prefill_batch_specs(cfg, shape)
+    batch_sh = _axes_sh(ctx, batch_axes_tree(batch_specs))
+    param_sh = _axes_sh(ctx, model.param_axes)
+    B = shape.global_batch
+    S = _dec_len(cfg, shape)
+    Smax = max_len or S
+    cache_ax = model.cache_axes(B, Smax)
+    cache_sh = _axes_sh(ctx, cache_ax)
+    logits_sh = ctx.sharding(("batch", "vocab"))
+
+    def serve_prefill(params, batch):
+        with sharding_context(mesh, rules):
+            return model.prefill(params, batch, max_len=Smax)
+
+    fn = jax.jit(serve_prefill, in_shardings=(param_sh, batch_sh),
+                 out_shardings=(logits_sh, cache_sh))
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return StepBundle(fn=fn, arg_specs=(params_shape, batch_specs),
+                      model=model, rules=rules,
+                      meta={"kind": "prefill", "max_len": Smax})
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                      remat: str = "none",
+                      moe_mode: Optional[str] = None) -> StepBundle:
+    multi_pod = "pod" in mesh.shape
+    rules = fit_batch_sharding(
+        rules_for(cfg, "serve", multi_pod, moe_mode=moe_mode), mesh,
+        shape.global_batch)
+    model = build_model(cfg, mesh, rules, remat=remat)
+    ctx = ShardingContext(mesh, rules)
+    B = shape.global_batch
+    S = shape.seq_len
+    if cfg.is_encoder_decoder:
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(B, S // cfg.decoder_ratio, enc_len=S))
+        cache_ax = model.cache_axes(B, S // cfg.decoder_ratio, enc_len=S)
+    else:
+        cache_shape = jax.eval_shape(lambda: model.init_cache(B, S))
+        cache_ax = model.cache_axes(B, S)
+    cache_sh = _axes_sh(ctx, cache_ax)
+    param_sh = _axes_sh(ctx, model.param_axes)
+    tok_specs, len_specs = decode_input_specs(cfg, shape)
+    tok_sh = ctx.sharding(("batch", None))
+    len_sh = ctx.sharding(("batch",))
+    logits_sh = ctx.sharding(("batch", "vocab"))
+
+    def serve_decode(params, cache, tokens, lengths):
+        with sharding_context(mesh, rules):
+            return model.decode_step(params, cache, tokens, lengths)
+
+    fn = jax.jit(serve_decode,
+                 in_shardings=(param_sh, cache_sh, tok_sh, len_sh),
+                 out_shardings=(logits_sh, cache_sh),
+                 donate_argnums=(1,))
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return StepBundle(fn=fn,
+                      arg_specs=(params_shape, cache_shape, tok_specs, len_specs),
+                      model=model, rules=rules,
+                      meta={"kind": "decode", "cache_len": S})
+
+
+def _dec_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    if cfg.is_encoder_decoder:
+        return shape.seq_len // cfg.decoder_ratio
+    return shape.seq_len
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh, **opts) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, **opts)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, **opts)
+    return build_decode_step(cfg, shape, mesh, **opts)

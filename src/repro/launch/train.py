@@ -1,0 +1,62 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Uses the elastic local mesh (all visible devices) and the same step-builder
+the dry-run lowers for the production 16x16 mesh — only the mesh differs.
+Checkpoint/restart: re-launching with the same --ckpt resumes."""
+
+import argparse
+import dataclasses
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import get_config, reduced_config
+from repro.data.pipeline import data_iter
+from repro.distributed.sharding import train_rules
+from repro.launch.mesh import make_elastic_mesh
+from repro.models.api import build_model
+from repro.training.train_loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--reduced", action="store_true",
+                    help="width/depth-reduced config (CPU-friendly)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg, num_layers=6, d_model=256, vocab_size=4096)
+        cfg = dataclasses.replace(cfg, d_ff=0 if cfg.d_ff == 0 else 1024)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    mesh = make_elastic_mesh()
+    rules = train_rules(multi_pod=False)
+    model = build_model(cfg, mesh, rules)
+    tc = TrainConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                     total_steps=args.steps,
+                     num_microbatches=args.microbatches,
+                     optimizer=args.optimizer)
+    print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params) on "
+          f"mesh {dict(mesh.shape)} for {args.steps} steps")
+    with mesh:
+        out = train(model, mesh, rules, tc,
+                    data_iter(cfg, shape, seed=args.seed),
+                    num_steps=args.steps, checkpoint_dir=args.ckpt,
+                    log_every=10,
+                    hooks={"on_log": lambda m: print(
+                        f"  step {m['step']:5d}  loss {m['loss']:.4f}  "
+                        f"lr {m['lr']:.2e}")})
+    h = out["history"]
+    print(f"done: loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Uniform model API: every architecture builds to a :class:`Model` with the
+same five entry points, so the serving engine, trainer, and dry-run treat all
+ten assigned architectures identically (this *is* Clipper's "model container"
+narrow waist, §4.4 of the paper, applied at the model-definition level)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]            # rng -> params
+    param_axes: Any                      # logical-axes tree (same structure)
+    loss_fn: Callable[..., Any]          # (params, batch) -> scalar loss
+    prefill: Callable[..., Any]          # (params, batch) -> (logits, cache)
+    decode_step: Callable[..., Any]      # (params, cache, tokens, lengths) -> (logits, cache)
+    init_cache: Callable[..., Any]       # (batch, max_len) -> cache
+    cache_axes: Callable[..., Any]       # (batch, max_len) -> logical-axes tree
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+
+def build_model(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
+                **opts) -> Model:
+    """Dispatch on family. mesh/rules drive TP padding and MoE shard_map."""
+    from repro.models import transformer, xlstm, hymba, encdec
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.build(cfg, mesh, rules, remat=remat, **opts)
+    if cfg.family == "ssm":
+        return xlstm.build(cfg, mesh, rules, remat=remat, **opts)
+    if cfg.family == "hybrid":
+        return hymba.build(cfg, mesh, rules, remat=remat, **opts)
+    if cfg.family == "encdec":
+        return encdec.build(cfg, mesh, rules, remat=remat, **opts)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,358 @@
+"""Shared model substrate: parameter specs, norms, RoPE, attention paths.
+
+Three attention implementations (DESIGN.md §5):
+
+* ``attention_train``   — full masked einsum; differentiable; used by the
+  train step (seq ≤ 4k, transient S² scores bounded via microbatching).
+* ``attention_prefill`` — blocked online-softmax with *causal block skipping*
+  (``fori_loop`` with data-dependent trip count); forward-only; used by
+  serve_prefill so 32k contexts never materialize S².
+* ``attention_decode``  — single-query masked attention against a cache with
+  per-sample lengths.
+
+The Pallas kernels in ``repro.kernels`` are the TPU-target hot-path versions
+of the latter two, validated against these (and ``ref.py``) oracles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import shard
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+class Spec(NamedTuple):
+    """Declarative parameter: shape, logical axes, init kind."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones
+    fan_in: Optional[int] = None
+    dtype: Any = DEFAULT_DTYPE
+
+
+def _init_leaf(key, spec: Spec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan = spec.fan_in or (spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1])
+    scale = 1.0 / math.sqrt(max(1, fan))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_tree(rng, specs):
+    """Instantiate a (nested dict) tree of Specs into parameters."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_tree(specs):
+    """Extract the logical-axes tree (same structure as params)."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stacked(specs, num: int):
+    """Prepend a scan (layer) dimension to every Spec in the tree."""
+    return jax.tree.map(
+        lambda s: Spec((num,) + s.shape, (None,) + s.axes, s.init, s.fan_in, s.dtype),
+        specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# norms & rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention paths
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: [B,Sq,Hkv,G,D], k: [B,Sk,Hkv,D] -> [B,Hkv,G,Sq,Sk] fp32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+_NO_WINDOW = 1 << 30
+
+
+def _effective_window(window) -> jax.Array:
+    """window may be a Python int or a traced per-layer scalar; 0 = full."""
+    w = jnp.asarray(window, jnp.int32)
+    return jnp.where(w > 0, w, _NO_WINDOW)
+
+
+def attention_train(q, k, v, *, causal: bool = True, window=0,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Full masked attention (differentiable). q [B,Sq,Hq,D], k/v [B,Sk,Hkv,D]."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = scale or (1.0 / math.sqrt(D))
+    qg = q.reshape(B, Sq, Hkv, G, D) * scale
+    s = _gqa_scores(qg, k)  # [B,Hkv,G,Sq,Sk]
+    Sk = k.shape[1]
+    w = _effective_window(window)
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = (k_pos > q_pos - w)
+    if causal:
+        mask &= k_pos <= q_pos
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, Hq, D)
+
+
+def attention_prefill(q, k, v, *, causal: bool = True, window=0,
+                      q_block: int = 512, k_block: int = 1024,
+                      scale: Optional[float] = None,
+                      q_offset=None) -> jax.Array:
+    """Blocked online-softmax attention with causal/window block skipping.
+
+    Forward-only (uses fori_loop with data-dependent trip counts). Never
+    materializes more than a [q_block, k_block] score tile per (B, Hkv, G).
+
+    q_offset: absolute position of q row 0 (may be traced — used by the
+    context-parallel path where each shard holds a sequence slice). Defaults
+    to suffix alignment (Sk - Sq).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale or (1.0 / math.sqrt(D))
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    assert Sq % q_block == 0 and Sk % k_block == 0, (Sq, q_block, Sk, k_block)
+    nq = Sq // q_block
+    w = _effective_window(window)
+    if q_offset is None:
+        q_offset = Sk - Sq
+    qg = (q.reshape(B, Sq, Hkv, G, D) * scale)
+
+    def q_step(_, qi):
+        qb = lax.dynamic_slice_in_dim(qg, qi * q_block, q_block, axis=1)
+        q_lo = qi * q_block + q_offset            # absolute pos of first q row
+        q_hi = q_lo + q_block - 1
+        # block range of k that can be attended by this q block
+        nk = Sk // k_block
+        k_end = jnp.minimum((q_hi // k_block) + 1, nk) if causal else nk
+        k_start = jnp.maximum(0, (q_lo - w + 1) // k_block)
+
+        acc0 = jnp.zeros((B, q_block, Hkv, G, D), jnp.float32)
+        m0 = jnp.full((B, Hkv, G, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+
+        def k_step(ki, carry):
+            acc, m, l = carry
+            kb = lax.dynamic_slice_in_dim(k, ki * k_block, k_block, axis=1)
+            vb = lax.dynamic_slice_in_dim(v, ki * k_block, k_block, axis=1)
+            s = _gqa_scores(qb, kb)  # [B,Hkv,G,qb,kb]
+            q_pos = q_lo + jnp.arange(q_block)[:, None]
+            k_pos = ki * k_block + jnp.arange(k_block)[None, :]
+            mask = (k_pos > q_pos - w)
+            if causal:
+                mask &= k_pos <= q_pos
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None]
+            acc = acc + jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), vb
+                                   ).astype(jnp.float32)
+            return acc, m_new, l
+
+        acc, m, l = lax.fori_loop(k_start, k_end, k_step, (acc0, m0, l0))
+        safe_l = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, (acc / safe_l).astype(q.dtype)
+
+    _, blocks = lax.scan(q_step, None, jnp.arange(nq))   # [nq,B,qb,Hkv,G,D]
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, Hkv, G, D)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def attention_decode(q, k_cache, v_cache, lengths, *, window=0,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: [B,1,Hq,D]; k/v_cache: [B,Smax,Hkv,D]; lengths: [B] number of valid
+    positions (the current token is at lengths-1).
+    """
+    B, _, Hq, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale or (1.0 / math.sqrt(D))
+    w = _effective_window(window)
+    qg = q.reshape(B, 1, Hkv, G, D) * scale
+    s = _gqa_scores(qg, k_cache)[:, :, :, 0, :]        # [B,Hkv,G,Sk]
+    k_pos = jnp.arange(Smax)[None, :]
+    valid = (k_pos < lengths[:, None]) & (k_pos >= lengths[:, None] - w)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def attn_specs(d_model: int, nq: int, nkv: int, hd: int, bias: bool) -> Dict[str, Spec]:
+    s = {
+        "wq": Spec((d_model, nq * hd), ("fsdp", "heads"), fan_in=d_model),
+        "wk": Spec((d_model, nkv * hd), ("fsdp", "kv_heads"), fan_in=d_model),
+        "wv": Spec((d_model, nkv * hd), ("fsdp", "kv_heads"), fan_in=d_model),
+        "wo": Spec((nq * hd, d_model), ("heads", "fsdp"), fan_in=nq * hd),
+    }
+    if bias:
+        s["bq"] = Spec((nq * hd,), ("heads",), init="zeros")
+        s["bk"] = Spec((nkv * hd,), ("kv_heads",), init="zeros")
+        s["bv"] = Spec((nkv * hd,), ("kv_heads",), init="zeros")
+    return s
+
+
+def attn_qkv(p, x, nq: int, nkv: int, hd: int):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard(q.reshape(B, S, nq, hd), "batch", "seq", "heads", None)
+    k = shard(k.reshape(B, S, nkv, hd), "batch", "seq", "kv_heads", None)
+    v = shard(v.reshape(B, S, nkv, hd), "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def glu_specs(d_model: int, d_ff: int) -> Dict[str, Spec]:
+    return {
+        "wi": Spec((d_model, d_ff), ("fsdp", "ffn"), fan_in=d_model),
+        "wg": Spec((d_model, d_ff), ("fsdp", "ffn"), fan_in=d_model),
+        "wo": Spec((d_ff, d_model), ("ffn", "fsdp"), fan_in=d_ff),
+    }
+
+
+def glu_apply(p, x):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_specs(vocab: int, d_model: int) -> Dict[str, Spec]:
+    return {
+        "embedding": Spec((vocab, d_model), ("vocab", "fsdp"), fan_in=1),
+        "head": Spec((d_model, vocab), ("fsdp", "vocab"), fan_in=d_model),
+        "final_norm": Spec((d_model,), ("embed",), init="ones"),
+    }
+
+
+def embed_tokens(p, tokens):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    return shard(x, "batch", "seq", "embed")
+
+
+def lm_head(p, x, norm_eps: float):
+    x = rmsnorm(x, p["final_norm"], norm_eps)
+    logits = x @ p["head"]
+    return shard(logits, "batch", None, "vocab")
+
+
+def chunked_loss(p, x, labels, norm_eps: float, chunk: int = 512) -> jax.Array:
+    """Cross-entropy over the vocab, chunked over sequence so full [B,S,V]
+    logits are never materialized. x: [B,S,d], labels: [B,S]."""
+    B, S, _ = x.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    x = rmsnorm(x, p["final_norm"], norm_eps)
+
+    def step(tot, idx):
+        xb = lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=1)
+        yb = lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        logits = (xb @ p["head"]).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    total, _ = lax.scan(step, jnp.float32(0.0), jnp.arange(S // chunk))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# KV cache helpers (per-sample positions -> continuous batching friendly)
+# ---------------------------------------------------------------------------
+
+def cache_update(k_cache, v_cache, k_new, v_new, lengths):
+    """Write one new K/V row per sample at its own position.
+
+    k_cache/v_cache: [B,Smax,Hkv,D]; k_new/v_new: [B,1,Hkv,D]; lengths: [B]
+    (position to write, i.e. current length before this token).
+    """
+    def write(c, row, pos):
+        return lax.dynamic_update_slice(c, row, (pos, 0, 0))
+    k_cache = jax.vmap(write)(k_cache, k_new, lengths)
+    v_cache = jax.vmap(write)(v_cache, v_new, lengths)
+    return k_cache, v_cache
+
+
+def ring_cache_update(k_cache, v_cache, k_new, v_new, lengths):
+    """Sliding-window ring buffer: write at position % window. Attention is
+    permutation-invariant over KV rows (RoPE is applied at write time), so
+    circular order is fine — only the valid count matters."""
+    W = k_cache.shape[1]
+    return cache_update(k_cache, v_cache, k_new, v_new, lengths % W)
+
+
+def attention_decode_ring(q, k_cache, v_cache, lengths, *,
+                          scale: Optional[float] = None) -> jax.Array:
+    """Decode attention against a window-sized ring cache.
+
+    All slots are valid once the ring has wrapped; before that, only the
+    first ``lengths+1`` slots hold data. q: [B,1,Hq,D]; caches [B,W,Hkv,D];
+    lengths: [B] tokens seen BEFORE this one (current was just written)."""
+    W = k_cache.shape[1]
+    count = jnp.minimum(lengths + 1, W)
+    return attention_decode(q, k_cache, v_cache, count, window=0, scale=scale)

@@ -1,0 +1,215 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: ``batch["frames"]`` carries
+precomputed frame embeddings [B, S_enc, d]. The decoder operates on text
+tokens of length ``seq_len // decoder_ratio`` for train/prefill shapes, and
+decodes one token against a seq_len-long encoder memory for decode shapes
+(DESIGN.md §4)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.api import Model
+from repro.models.common import (
+    Spec, attn_qkv, attn_specs, attention_decode, attention_prefill,
+    attention_train, axes_tree, cache_update, chunked_loss, embed_specs,
+    embed_tokens, glu_apply, glu_specs, init_tree, lm_head, rmsnorm, rope,
+    stacked, DEFAULT_DTYPE,
+)
+
+
+def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
+          q_block: int = 512, k_block: int = 1024, **_) -> Model:
+    tp = mesh.shape.get("model", 1)
+    pd = cfg.padded(tp)
+    nq, nkv, hd, V = pd.num_q_heads, pd.num_kv_heads, pd.head_dim, pd.vocab_size
+    d, L, eps = cfg.d_model, cfg.num_layers, cfg.norm_eps
+
+    enc_layer = {
+        "ln1": Spec((d,), ("embed",), "ones"),
+        "attn": attn_specs(d, nq, nkv, hd, cfg.qkv_bias),
+        "ln2": Spec((d,), ("embed",), "ones"),
+        "ffn": glu_specs(d, cfg.d_ff),
+    }
+    dec_layer = {
+        "ln1": Spec((d,), ("embed",), "ones"),
+        "self": attn_specs(d, nq, nkv, hd, cfg.qkv_bias),
+        "ln_x": Spec((d,), ("embed",), "ones"),
+        "cross": attn_specs(d, nq, nkv, hd, cfg.qkv_bias),
+        "ln2": Spec((d,), ("embed",), "ones"),
+        "ffn": glu_specs(d, cfg.d_ff),
+    }
+    specs = {
+        "embed": embed_specs(V, d),
+        "enc_norm": Spec((d,), ("embed",), "ones"),
+        "enc": stacked(enc_layer, L),
+        "dec": stacked(dec_layer, L),
+    }
+
+    def _enc_attn(lp, h, train: bool):
+        B, S, _ = h.shape
+        q, k, v = attn_qkv(lp["attn"], h, nq, nkv, hd)
+        pos = jnp.arange(S)[None, :]
+        q, k = rope(q, pos, cfg.rope_theta), rope(k, pos, cfg.rope_theta)
+        if train:
+            o = attention_train(q, k, v, causal=False)
+        else:
+            o = attention_prefill(q, k, v, causal=False,
+                                  q_block=q_block, k_block=k_block)
+        return o.reshape(B, S, nq * hd) @ lp["attn"]["wo"]
+
+    def _encode(params, frames, train: bool):
+        x = shard(frames.astype(DEFAULT_DTYPE), "batch", None, "embed")
+
+        def body(x, lp):
+            x = x + shard(_enc_attn(lp, rmsnorm(x, lp["ln1"], eps), train),
+                          "batch", None, "embed")
+            x = x + shard(glu_apply(lp["ffn"], rmsnorm(x, lp["ln2"], eps)),
+                          "batch", None, "embed")
+            return x, None
+
+        body_fn = body
+        if train and remat != "none":
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = lax.scan(body_fn, x, params["enc"])
+        return rmsnorm(x, params["enc_norm"], eps)
+
+    def _cross_kv(lp, memory):
+        B, S, _ = memory.shape
+        k = (memory @ lp["cross"]["wk"]).reshape(B, S, nkv, hd)
+        v = (memory @ lp["cross"]["wv"]).reshape(B, S, nkv, hd)
+        if "bk" in lp["cross"]:
+            k = k + lp["cross"]["bk"].reshape(nkv, hd)
+            v = v + lp["cross"]["bv"].reshape(nkv, hd)
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+        return k, v
+
+    def _dec_layer_seq(x, lp, memory, train: bool):
+        B, S, _ = x.shape
+        h = rmsnorm(x, lp["ln1"], eps)
+        q, k, v = attn_qkv(lp["self"], h, nq, nkv, hd)
+        pos = jnp.arange(S)[None, :]
+        q, k = rope(q, pos, cfg.rope_theta), rope(k, pos, cfg.rope_theta)
+        if train:
+            o = attention_train(q, k, v, causal=True)
+        else:
+            o = attention_prefill(q, k, v, causal=True,
+                                  q_block=min(q_block, S), k_block=min(k_block, S))
+        x = x + shard(o.reshape(B, S, nq * hd) @ lp["self"]["wo"],
+                      "batch", None, "embed")
+        # cross attention
+        h = rmsnorm(x, lp["ln_x"], eps)
+        qx = (h @ lp["cross"]["wq"]).reshape(B, S, nq, hd)
+        if "bq" in lp["cross"]:
+            qx = qx + lp["cross"]["bq"].reshape(nq, hd)
+        kx, vx = _cross_kv(lp, memory)
+        if train:
+            ox = attention_train(qx, kx, vx, causal=False)
+        else:
+            ox = attention_prefill(qx, kx, vx, causal=False,
+                                   q_block=min(q_block, S), k_block=k_block)
+        x = x + shard(ox.reshape(B, S, nq * hd) @ lp["cross"]["wo"],
+                      "batch", None, "embed")
+        x = x + shard(glu_apply(lp["ffn"], rmsnorm(x, lp["ln2"], eps)),
+                      "batch", None, "embed")
+        return x, (k, v)
+
+    def loss_fn(params, batch):
+        memory = _encode(params, batch["frames"], train=True)
+        x = embed_tokens(params["embed"], batch["tokens"])
+
+        def body(x, lp):
+            x, _ = _dec_layer_seq(x, lp, memory, train=True)
+            return x, None
+
+        body_fn = body
+        if remat != "none":
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = lax.scan(body_fn, x, params["dec"])
+        return chunked_loss(params["embed"], x, batch["labels"], eps)
+
+    def prefill(params, batch, max_len=None):
+        memory = _encode(params, batch["frames"], train=False)
+        x = embed_tokens(params["embed"], batch["tokens"])
+        B, S, _ = x.shape
+        Smax = max_len or S
+
+        def body(x, lp):
+            x, (k, v) = _dec_layer_seq(x, lp, memory, train=False)
+            ck, cv = _cross_kv(lp, memory)
+            if Smax > S:
+                pad = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            return x, (k, v, ck, cv)
+
+        x, (ks, vs, cks, cvs) = lax.scan(body, x, params["dec"])
+        logits = lm_head(params["embed"], x[:, -1:, :], eps)[:, 0]
+        cache = {"k": ks, "v": vs, "ck": cks, "cv": cvs,
+                 "lengths": jnp.full((B,), S, jnp.int32)}
+        return logits, cache
+
+    def decode_step(params, cache, tokens, lengths):
+        x = embed_tokens(params["embed"], tokens)
+        B = x.shape[0]
+
+        def body(x, xs):
+            lp, k_l, v_l, ck_l, cv_l = xs
+            h = rmsnorm(x, lp["ln1"], eps)
+            q, k, v = attn_qkv(lp["self"], h, nq, nkv, hd)
+            q = rope(q, lengths[:, None], cfg.rope_theta)
+            k = rope(k, lengths[:, None], cfg.rope_theta)
+            k_l, v_l = cache_update(k_l, v_l, k, v, lengths)
+            o = attention_decode(q, k_l, v_l, lengths + 1)
+            x = x + shard(o.reshape(B, 1, nq * hd) @ lp["self"]["wo"],
+                          "batch", None, "embed")
+            h = rmsnorm(x, lp["ln_x"], eps)
+            qx = (h @ lp["cross"]["wq"]).reshape(B, 1, nq, hd)
+            if "bq" in lp["cross"]:
+                qx = qx + lp["cross"]["bq"].reshape(nq, hd)
+            S_enc = ck_l.shape[1]
+            enc_len = jnp.full((B,), S_enc, jnp.int32)
+            ox = attention_decode(qx, ck_l, cv_l, enc_len)
+            x = x + shard(ox.reshape(B, 1, nq * hd) @ lp["cross"]["wo"],
+                          "batch", None, "embed")
+            x = x + shard(glu_apply(lp["ffn"], rmsnorm(x, lp["ln2"], eps)),
+                          "batch", None, "embed")
+            return x, (k_l, v_l)
+
+        x, (ks, vs) = lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        logits = lm_head(params["embed"], x, eps)[:, 0]
+        return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"],
+                        "lengths": lengths + 1}
+
+    def init_cache(batch: int, max_len: int, enc_len: int = 0):
+        kv = jnp.zeros((L, batch, max_len, nkv, hd), DEFAULT_DTYPE)
+        ckv = jnp.zeros((L, batch, enc_len or max_len, nkv, hd), DEFAULT_DTYPE)
+        return {"k": kv, "v": kv, "ck": ckv, "cv": ckv,
+                "lengths": jnp.zeros((batch,), jnp.int32)}
+
+    def cache_axes(batch: int, max_len: int, enc_len: int = 0):
+        kv = (None, "batch", None, "kv_heads", None)
+        return {"k": kv, "v": kv, "ck": kv, "cv": kv, "lengths": ("batch",)}
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: init_tree(rng, specs),
+        param_axes=axes_tree(specs),
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_axes=cache_axes,
+        extras={"padded": pd},
+    )

@@ -1,0 +1,363 @@
+"""Hymba: hybrid blocks with *parallel* attention and mamba(SSD) heads.
+
+Each block feeds the same normed input to (a) GQA attention — sliding window
+except for 3 global layers — and (b) an SSD branch (mamba2-style: in-proj,
+short causal conv, scalar-decay matrix-state recurrence via the shared
+chunked linear core, silu gate, out-proj). Branch outputs are per-branch
+RMS-normed and averaged (the Hymba paper's fusion), then a GLU FFN follows.
+
+Layer organization (§Perf memory-term hillclimb): the 3 global-attention
+layers are unrolled with full-length caches; the 29 sliding-window layers
+are scanned in two segments with *window-sized ring-buffer* caches — the
+KV state for long_500k drops from O(L·S) to O(3·S + 29·W). RoPE is applied
+at write time, so ring order is irrelevant (attention is permutation-
+invariant over KV rows)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.api import Model
+from repro.models.common import (
+    Spec, attn_qkv, attn_specs, attention_decode, attention_decode_ring,
+    attention_prefill, attention_train, axes_tree, cache_update,
+    chunked_loss, embed_specs, embed_tokens, glu_apply, glu_specs, init_tree,
+    lm_head, ring_cache_update, rmsnorm, rope, stacked, DEFAULT_DTYPE,
+)
+from repro.models.linear_core import (
+    chunked_linear_attention, linear_attention_step,
+)
+
+
+def _ssd_specs(d: int, nh: int, hd: int, ds: int, conv_w: int) -> Dict[str, Spec]:
+    d_inner = nh * hd
+    return {
+        "w_in": Spec((d, 2 * d_inner), ("fsdp", "heads"), fan_in=d),
+        "conv": Spec((conv_w, d_inner), (None, "heads"), fan_in=conv_w),
+        "w_bc": Spec((d, 2 * nh * ds), ("fsdp", "heads"), fan_in=d),
+        "w_dt": Spec((d, nh), ("fsdp", "heads"), fan_in=d, dtype=jnp.float32),
+        "b_dt": Spec((nh,), ("heads",), "zeros", dtype=jnp.float32),
+        "a_log": Spec((nh,), ("heads",), "zeros", dtype=jnp.float32),
+        "d_skip": Spec((nh,), ("heads",), "zeros", dtype=jnp.float32),
+        "w_out": Spec((d_inner, d), ("heads", "fsdp"), fan_in=d_inner),
+    }
+
+
+def _causal_conv(x, kern, state=None):
+    """Depthwise causal conv via shifts. x: [B,S,C]; kern: [W,C];
+    state: [B,W-1,C] trailing inputs from the previous segment."""
+    W = kern.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, j:j + x.shape[1]] * kern[j] for j in range(W))
+    new_state = xp[:, -(W - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_gates(p, x):
+    """(log_f, log_i) from dt. log_f = -dt*A <= 0; log_i = log(dt)."""
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["w_dt"] + p["b_dt"])
+    dt = jnp.clip(dt, 1e-4, 8.0)
+    A = jnp.exp(p["a_log"])          # positive per-head decay rate
+    return -dt * A, jnp.log(dt)
+
+
+def _ssd_seq(p, x, state, chunk):
+    """SSD branch over a sequence. state: (conv_state, S [B,nh,ds,hd])."""
+    B, S, d = x.shape
+    nh = p["w_dt"].shape[1]
+    ds = p["w_bc"].shape[1] // (2 * nh)
+    hd = p["w_in"].shape[1] // (2 * nh)
+    conv_state, Sm = state
+    up = x @ p["w_in"]
+    d_inner = nh * hd
+    xin, z = up[..., :d_inner], up[..., d_inner:]
+    xin, conv_state = _causal_conv(xin, p["conv"], conv_state)
+    bc = x @ p["w_bc"]
+    b = bc[..., :nh * ds].reshape(B, S, nh, ds)
+    c = bc[..., nh * ds:].reshape(B, S, nh, ds)
+    log_f, log_i = _ssd_gates(p, x)
+    v = xin.reshape(B, S, nh, hd)
+    y, Sm = chunked_linear_attention(c, b, v, log_f, log_i, chunk=chunk,
+                                     initial_state=Sm)
+    y = y + v * p["d_skip"].astype(v.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    return y @ p["w_out"], (conv_state, Sm)
+
+
+def _ssd_step(p, x, state):
+    """One token. x: [B,1,d]."""
+    B = x.shape[0]
+    nh = p["w_dt"].shape[1]
+    ds = p["w_bc"].shape[1] // (2 * nh)
+    hd = p["w_in"].shape[1] // (2 * nh)
+    conv_state, Sm = state
+    up = x @ p["w_in"]
+    d_inner = nh * hd
+    xin, z = up[..., :d_inner], up[..., d_inner:]
+    xin, conv_state = _causal_conv(xin, p["conv"], conv_state)
+    bc = x @ p["w_bc"]
+    b = bc[:, 0, :nh * ds].reshape(B, nh, ds)
+    c = bc[:, 0, nh * ds:].reshape(B, nh, ds)
+    log_f, log_i = _ssd_gates(p, x)
+    v = xin.reshape(B, nh, hd)
+    y, Sm = linear_attention_step(Sm, c, b, v, log_f[:, 0], log_i[:, 0])
+    y = y + v * p["d_skip"].astype(v.dtype)[None, :, None]
+    y = y.reshape(B, 1, d_inner) * jax.nn.silu(z)
+    return y @ p["w_out"], (conv_state, Sm)
+
+
+def _segments(cfg: ModelConfig) -> List[int]:
+    """SWA segment lengths between consecutive global layers."""
+    gl = sorted(cfg.global_layers)
+    assert gl and gl[0] == 0, "expect a leading global layer"
+    segs = []
+    for a, b in zip(gl, gl[1:] + [cfg.num_layers]):
+        segs.append(b - a - 1)
+    return segs       # e.g. (0,15,31), L=32 -> [14, 15, 0]
+
+
+def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
+          chunk: int = 256, q_block: int = 512, k_block: int = 1024,
+          **_) -> Model:
+    tp = mesh.shape.get("model", 1)
+    pd = cfg.padded(tp)
+    nq, nkv, hd, V = pd.num_q_heads, pd.num_kv_heads, pd.head_dim, pd.vocab_size
+    d, L, eps = cfg.d_model, cfg.num_layers, cfg.norm_eps
+    ds, conv_w, W = cfg.ssm_state, cfg.conv_width, cfg.window
+    d_inner = nq * hd
+    n_global = len(cfg.global_layers)
+    segs = _segments(cfg)
+    n_swa = L - n_global
+
+    layer_specs = {
+        "ln": Spec((d,), ("embed",), "ones"),
+        "attn": attn_specs(d, nq, nkv, hd, cfg.qkv_bias),
+        "ssd": _ssd_specs(d, nq, hd, ds, conv_w),
+        "ln_attn": Spec((d,), ("embed",), "ones"),
+        "ln_ssd": Spec((d,), ("embed",), "ones"),
+        "ln2": Spec((d,), ("embed",), "ones"),
+        "ffn": glu_specs(d, cfg.d_ff),
+    }
+    specs = {
+        "embed": embed_specs(V, d),
+        "g": stacked(layer_specs, n_global),       # global-attention layers
+        "swa": stacked(layer_specs, n_swa),        # sliding-window layers
+    }
+
+    def _branches_seq(lp, x, window, ssd_state, train: bool):
+        """One block over a sequence; returns (x, (k, v), ssd_state)."""
+        B, S, _ = x.shape
+        h = rmsnorm(x, lp["ln"], eps)
+        q, k, v = attn_qkv(lp["attn"], h, nq, nkv, hd)
+        pos = jnp.arange(S)[None, :]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        if train:
+            o = attention_train(q, k, v, causal=True, window=window)
+        else:
+            o = attention_prefill(q, k, v, causal=True, window=window,
+                                  q_block=q_block, k_block=k_block)
+        a_out = o.reshape(B, S, nq * hd) @ lp["attn"]["wo"]
+        s_out, ssd_state = _ssd_seq(lp["ssd"], h, ssd_state, chunk)
+        mix = 0.5 * (rmsnorm(a_out, lp["ln_attn"], eps)
+                     + rmsnorm(s_out, lp["ln_ssd"], eps))
+        x = x + shard(mix, "batch", "seq", "embed")
+        x = x + shard(glu_apply(lp["ffn"], rmsnorm(x, lp["ln2"], eps)),
+                      "batch", "seq", "embed")
+        return x, (k, v), ssd_state
+
+    def _branches_step(lp, x, k_l, v_l, ssd_state, lengths, *, ring: bool):
+        B = x.shape[0]
+        h = rmsnorm(x, lp["ln"], eps)
+        q, k, v = attn_qkv(lp["attn"], h, nq, nkv, hd)
+        q = rope(q, lengths[:, None], cfg.rope_theta)
+        k = rope(k, lengths[:, None], cfg.rope_theta)
+        if ring:
+            k_l, v_l = ring_cache_update(k_l, v_l, k, v, lengths)
+            o = attention_decode_ring(q, k_l, v_l, lengths)
+        else:
+            k_l, v_l = cache_update(k_l, v_l, k, v, lengths)
+            o = attention_decode(q, k_l, v_l, lengths + 1)
+        a_out = o.reshape(B, 1, nq * hd) @ lp["attn"]["wo"]
+        s_out, ssd_state = _ssd_step(lp["ssd"], h, ssd_state)
+        mix = 0.5 * (rmsnorm(a_out, lp["ln_attn"], eps)
+                     + rmsnorm(s_out, lp["ln_ssd"], eps))
+        x = x + shard(mix, "batch", None, "embed")
+        x = x + shard(glu_apply(lp["ffn"], rmsnorm(x, lp["ln2"], eps)),
+                      "batch", None, "embed")
+        return x, (k_l, v_l), ssd_state
+
+    def _zero_ssd(n: int, B: int):
+        return (jnp.zeros((n, B, conv_w - 1, d_inner), DEFAULT_DTYPE),
+                jnp.zeros((n, B, nq, ds, hd), jnp.float32))
+
+    def _layer_at(pp, i):
+        return jax.tree.map(lambda p: p[i], pp)
+
+    def _seg_slice(pp, lo, n):
+        return jax.tree.map(lambda p: p[lo:lo + n], pp)
+
+    # ---------------- train / prefill driver ----------------
+    def _run_seq(params, x, train: bool, collect_cache: bool,
+                 Smax: int = 0):
+        B, S, _ = x.shape
+        caches_g: List[Any] = []
+        states_g: List[Any] = []
+        caches_w: List[Any] = []
+        conv_g0, ssd_g0 = _zero_ssd(n_global, B)
+        conv_w0, ssd_w0 = _zero_ssd(n_swa, B)
+        swa_lo = 0
+
+        def swa_body(x, xs):
+            lp, cs, sm = xs
+            x, (k, v), (cs, sm) = _branches_seq(lp, x, W, (cs, sm), train)
+            if collect_cache:
+                if W >= S:      # no wrap yet: positions p land at slots p
+                    pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+                    kw, vw = jnp.pad(k, pad), jnp.pad(v, pad)
+                else:           # ring: position p lives at slot p % W
+                    kw = jnp.roll(k[:, -W:], S % W, axis=1)
+                    vw = jnp.roll(v[:, -W:], S % W, axis=1)
+                return x, (kw, vw, cs, sm)
+            return x, None
+
+        body = swa_body
+        if train and remat != "none":
+            body = jax.checkpoint(swa_body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+
+        for gi in range(n_global):
+            lp = _layer_at(params["g"], gi)
+            x, (k, v), st = _branches_seq(
+                lp, x, 0, (conv_g0[gi], ssd_g0[gi]), train)
+            if collect_cache:
+                if Smax > S:
+                    pad = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
+                    k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+                caches_g.append((k, v))
+                states_g.append(st)
+            n = segs[gi]
+            if n:
+                seg = _seg_slice(params["swa"], swa_lo, n)
+                x, ys = lax.scan(body, x,
+                                 (seg, conv_w0[swa_lo:swa_lo + n],
+                                  ssd_w0[swa_lo:swa_lo + n]))
+                if collect_cache:
+                    caches_w.append(ys)
+                swa_lo += n
+        return x, caches_g, states_g, caches_w
+
+    def loss_fn(params, batch):
+        x = embed_tokens(params["embed"], batch["tokens"])
+        x, _, _, _ = _run_seq(params, x, train=True, collect_cache=False)
+        return chunked_loss(params["embed"], x, batch["labels"], eps)
+
+    def prefill(params, batch, max_len=None):
+        x = embed_tokens(params["embed"], batch["tokens"])
+        B, S, _ = x.shape
+        Smax = max_len or S
+        x, cg, sg, cw = _run_seq(params, x, train=False, collect_cache=True,
+                                 Smax=Smax)
+        logits = lm_head(params["embed"], x[:, -1:, :], eps)[:, 0]
+        cache = {
+            "kg": jnp.stack([k for k, _ in cg]),
+            "vg": jnp.stack([v for _, v in cg]),
+            "kw": jnp.concatenate([y[0] for y in cw], axis=0),
+            "vw": jnp.concatenate([y[1] for y in cw], axis=0),
+            "conv_g": jnp.stack([st[0] for st in sg]),
+            "ssd_g": jnp.stack([st[1] for st in sg]),
+            "conv_w": jnp.concatenate([y[2] for y in cw], axis=0),
+            "ssd_w": jnp.concatenate([y[3] for y in cw], axis=0),
+            "lengths": jnp.full((B,), S, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(params, cache, tokens, lengths):
+        x = embed_tokens(params["embed"], tokens)
+        kg, vg = [], []
+        conv_g, ssd_g = [], []
+        swa_lo = 0
+        kw_parts, vw_parts, conv_w_parts, ssd_w_parts = [], [], [], []
+
+        def swa_body(x, xs):
+            lp, k_l, v_l, cs, sm = xs
+            x, (k_l, v_l), (cs, sm) = _branches_step(
+                lp, x, k_l, v_l, (cs, sm), lengths, ring=True)
+            return x, (k_l, v_l, cs, sm)
+
+        for gi in range(n_global):
+            lp = _layer_at(params["g"], gi)
+            x, (k_l, v_l), (cs, sm) = _branches_step(
+                lp, x, cache["kg"][gi], cache["vg"][gi],
+                (cache["conv_g"][gi], cache["ssd_g"][gi]), lengths,
+                ring=False)
+            kg.append(k_l), vg.append(v_l)
+            conv_g.append(cs), ssd_g.append(sm)
+            n = segs[gi]
+            if n:
+                seg = _seg_slice(params["swa"], swa_lo, n)
+                sl = slice(swa_lo, swa_lo + n)
+                x, (kn, vn, cn, sn) = lax.scan(
+                    swa_body, x,
+                    (seg, cache["kw"][sl], cache["vw"][sl],
+                     cache["conv_w"][sl], cache["ssd_w"][sl]))
+                kw_parts.append(kn), vw_parts.append(vn)
+                conv_w_parts.append(cn), ssd_w_parts.append(sn)
+                swa_lo += n
+        logits = lm_head(params["embed"], x, eps)[:, 0]
+        new_cache = {
+            "kg": jnp.stack(kg), "vg": jnp.stack(vg),
+            "conv_g": jnp.stack(conv_g), "ssd_g": jnp.stack(ssd_g),
+            "kw": jnp.concatenate(kw_parts, axis=0),
+            "vw": jnp.concatenate(vw_parts, axis=0),
+            "conv_w": jnp.concatenate(conv_w_parts, axis=0),
+            "ssd_w": jnp.concatenate(ssd_w_parts, axis=0),
+            "lengths": lengths + 1,
+        }
+        return logits, new_cache
+
+    def init_cache(batch: int, max_len: int):
+        conv_g, ssd_g = _zero_ssd(n_global, batch)
+        conv_w, ssd_w = _zero_ssd(n_swa, batch)
+        return {
+            "kg": jnp.zeros((n_global, batch, max_len, nkv, hd), DEFAULT_DTYPE),
+            "vg": jnp.zeros((n_global, batch, max_len, nkv, hd), DEFAULT_DTYPE),
+            "kw": jnp.zeros((n_swa, batch, W, nkv, hd), DEFAULT_DTYPE),
+            "vw": jnp.zeros((n_swa, batch, W, nkv, hd), DEFAULT_DTYPE),
+            "conv_g": conv_g, "ssd_g": ssd_g,
+            "conv_w": conv_w, "ssd_w": ssd_w,
+            "lengths": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_axes(batch: int, max_len: int):
+        kv = (None, "batch", None, "kv_heads", None)
+        return {
+            "kg": kv, "vg": kv, "kw": kv, "vw": kv,
+            "conv_g": (None, "batch", None, "heads"),
+            "ssd_g": (None, "batch", "heads", None, None),
+            "conv_w": (None, "batch", None, "heads"),
+            "ssd_w": (None, "batch", "heads", None, None),
+            "lengths": ("batch",),
+        }
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: init_tree(rng, specs),
+        param_axes=axes_tree(specs),
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_axes=cache_axes,
+        extras={"padded": pd, "segments": segs},
+    )

@@ -1,0 +1,96 @@
+"""Chunked linear-attention core shared by mLSTM (xlstm) and SSD (hymba).
+
+Both are matrix-memory recurrences with per-step scalar gates:
+
+    S_t = f_t * S_{t-1} + i_t * k_t v_t^T          (S: [dk, dv] per head)
+    y_t = q_t · S_t
+
+The chunkwise-parallel form (GLA/mamba2 style) computes W steps at once:
+intra-chunk contributions via a decay-masked [W, W] score matrix, inter-chunk
+via the carried state — O(S·W) memory, differentiable (plain scan + einsum),
+exact (log-space decay ratios are ≤ 0 before exp, so fp32-stable).
+
+The dry-run/train/prefill paths use ``chunked_linear_attention``; decode uses
+``linear_attention_step``. The Pallas kernel `kernels/ssd_scan` mirrors the
+same math for the TPU hot path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_linear_attention(q, k, v, log_f, log_i, *, chunk: int = 256,
+                             initial_state=None) -> Tuple[jax.Array, jax.Array]:
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_f,log_i: [B,S,H] (log_f <= 0).
+
+    Returns (y [B,S,H,dv], final_state [B,H,dk,dv]).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    qc = q.reshape(B, nc, chunk, H, dk)
+    kc = k.reshape(B, nc, chunk, H, dk)
+    vc = v.reshape(B, nc, chunk, H, dv)
+    fc = log_f.reshape(B, nc, chunk, H).astype(jnp.float32)
+    ic = log_i.reshape(B, nc, chunk, H).astype(jnp.float32)
+
+    S0 = initial_state
+    if S0 is None:
+        S0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+
+    def chunk_step(state, xs):
+        qb, kb, vb, fb, ib = xs           # [B,chunk,H,*]
+        cum = jnp.cumsum(fb, axis=1)      # inclusive cumulative log-decay
+        # inter-chunk: y_state_t = exp(cum_t) * q_t . S0
+        y_state = jnp.einsum("bwhk,bhkv->bwhv", qb.astype(jnp.float32), state)
+        y_state = y_state * jnp.exp(cum)[..., None]
+        # intra-chunk decay-masked scores
+        scores = jnp.einsum("bwhk,buhk->bhwu", qb, kb,
+                            preferred_element_type=jnp.float32)
+        decay = cum[:, :, None, :] - cum[:, None, :, :] + ib[:, None, :, :]
+        decay = jnp.where(causal[None, :, :, None], decay, -jnp.inf)
+        scores = scores * jnp.exp(decay).transpose(0, 3, 1, 2)
+        y_intra = jnp.einsum("bhwu,buhv->bwhv", scores,
+                             vc_f := vb.astype(jnp.float32))
+        # state update
+        tot = cum[:, -1:, :]              # [B,1,H]
+        k_scaled = kb.astype(jnp.float32) * jnp.exp(tot - cum + ib)[..., None]
+        state = state * jnp.exp(tot[:, 0])[..., None, None] + \
+            jnp.einsum("bwhk,bwhv->bhkv", k_scaled, vc_f)
+        return state, (y_state + y_intra).astype(v.dtype)
+
+    state, ys = lax.scan(chunk_step, S0,
+                         (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+                          vc.transpose(1, 0, 2, 3, 4), fc.transpose(1, 0, 2, 3),
+                          ic.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dv)
+    return y, state
+
+
+def linear_attention_step(state, q, k, v, log_f, log_i):
+    """One decode step. state [B,H,dk,dv]; q,k [B,H,dk]; v [B,H,dv];
+    log_f/log_i [B,H]. Returns (y [B,H,dv], new_state)."""
+    f = jnp.exp(log_f.astype(jnp.float32))[..., None, None]
+    i = jnp.exp(log_i.astype(jnp.float32))[..., None, None]
+    outer = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                       v.astype(jnp.float32))
+    state = f * state + i * outer
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+def normalized_readout(y_aug):
+    """mLSTM normalizer trick: v was augmented with a ones column; divide the
+    first dv outputs by max(|last column|, 1)."""
+    y, n = y_aug[..., :-1], y_aug[..., -1:]
+    return y / jnp.maximum(jnp.abs(n), 1.0).astype(y.dtype)

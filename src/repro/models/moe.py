@@ -1,0 +1,237 @@
+"""Mixture-of-Experts FFN with expert parallelism (shard_map).
+
+Two execution modes (DESIGN.md §6):
+
+* ``ep``   — experts sharded over the ``model`` axis; activations stay
+  batch-sharded over ``data`` and *replicated* over ``model``, so dispatch is
+  a purely local sort/gather and combine is a single psum over ``model``
+  (same collective cost as a TP FFN all-reduce). Optional FSDP storage: the
+  ``d_model`` dim of expert weights sharded over ``data``, all-gathered
+  on demand per layer (ZeRO-3).
+* ``ep2d`` — kimi-scale serving: experts over ``model`` AND each expert's
+  ``d_ff`` over ``data`` (1T params cannot be stored 16-way). Tokens are
+  all-gathered over ``data`` in sequence chunks, partial-``d_ff`` GLU is
+  computed, and one fused psum over ``(data, model)`` combines.
+
+Routing is top-k softmax with per-shard capacity (sort-based ranking — no
+[T, E] one-hot matrices) and standard token dropping + switch-style load
+balancing aux loss.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import Spec
+
+
+class MoEDims(NamedTuple):
+    num_experts: int
+    top_k: int
+    capacity_factor: float
+    d_model: int
+    d_ff: int
+
+
+def moe_specs(d_model: int, d_ff: int, num_experts: int) -> Dict[str, Spec]:
+    return {
+        "router": Spec((d_model, num_experts), ("embed", None), fan_in=d_model,
+                       dtype=jnp.float32),
+        "wi": Spec((num_experts, d_model, d_ff), ("expert", "fsdp", "expert_ffn"),
+                   fan_in=d_model),
+        "wg": Spec((num_experts, d_model, d_ff), ("expert", "fsdp", "expert_ffn"),
+                   fan_in=d_model),
+        "wo": Spec((num_experts, d_ff, d_model), ("expert", "expert_ffn", "fsdp"),
+                   fan_in=d_ff),
+    }
+
+
+def _route(x2d: jax.Array, router: jax.Array, top_k: int):
+    """Top-k softmax routing. x2d: [T, d] -> (weights [T,k], experts [T,k], aux)."""
+    logits = (x2d.astype(jnp.float32) @ router)          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, top_k)               # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balancing loss
+    E = router.shape[1]
+    dispatch_frac = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    dispatch_frac = dispatch_frac / (x2d.shape[0] * top_k)
+    mean_prob = probs.mean(axis=0)
+    aux = E * jnp.sum(dispatch_frac * mean_prob)
+    return top_p, top_e, aux
+
+
+def _dispatch_indices(top_e: jax.Array, e_lo: int, e_hi: int, capacity: int,
+                      num_local: int):
+    """Sort-based capacity assignment for experts in [e_lo, e_hi).
+
+    Returns (rows [N], slots [N], keep [N]) where N = T*k; slot is the
+    destination row in a [num_local * capacity] buffer (clipped when dropped).
+    """
+    Tk = top_e.size
+    flat_e = top_e.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)             # group by expert
+    sorted_e = flat_e[order]
+    # rank within expert group = index - start index of that group
+    same_as_prev = jnp.concatenate([jnp.array([False]),
+                                    sorted_e[1:] == sorted_e[:-1]])
+    # rank = arange - index of first element of the group
+    idx = jnp.arange(Tk)
+    group_start = jnp.where(same_as_prev, 0, idx)
+    group_start = lax.associative_scan(jnp.maximum, group_start)
+    rank = idx - group_start
+    local = (sorted_e >= e_lo) & (sorted_e < e_hi)
+    keep = local & (rank < capacity)
+    slot = (sorted_e - e_lo) * capacity + jnp.minimum(rank, capacity - 1)
+    slot = jnp.where(keep, slot, num_local * capacity)   # overflow row
+    rows = order // top_e.shape[1]                       # source token row
+    return rows, slot, keep, order
+
+
+def _expert_glu(xb, wi, wg, wo):
+    """xb: [E_loc, C, d]; weights: [E_loc, d, dff] / [E_loc, dff, d]."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, wg)) * \
+        jnp.einsum("ecd,edf->ecf", xb, wi)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _moe_local(x2d, params, dims: MoEDims, e_lo, num_local, capacity):
+    """Route + dispatch + expert GLU + combine for one device's tokens.
+
+    x2d: [T, d] local tokens with *full* d_model and full d_ff weights.
+    Returns partial output [T, d] (sum of local experts' contributions) + aux.
+    """
+    T, d = x2d.shape
+    top_p, top_e, aux = _route(x2d, params["router"], dims.top_k)
+    rows, slot, keep, order = _dispatch_indices(
+        top_e, e_lo, e_lo + num_local, capacity, num_local)
+    buf = jnp.zeros((num_local * capacity + 1, d), x2d.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], x2d[rows], 0))
+    xb = buf[:-1].reshape(num_local, capacity, d)
+    yb = _expert_glu(xb, params["wi"], params["wg"], params["wo"])
+    yb = yb.reshape(num_local * capacity, d)
+    # combine: weighted scatter-add back to token rows
+    w = top_p.reshape(-1)[order]
+    contrib = jnp.where(keep[:, None], yb[jnp.minimum(slot, num_local * capacity - 1)]
+                        * w[:, None].astype(yb.dtype), 0)
+    y = jnp.zeros((T, d), x2d.dtype).at[rows].add(contrib)
+    return y, aux
+
+
+def moe_apply(params, x, dims: MoEDims, *, mesh, batch_axes: Tuple[str, ...],
+              fsdp_axis: Optional[str], ffn2d_axis: Optional[str],
+              chunk_tokens: int = 4096):
+    """MoE FFN. x: [B, S, d] (sharded batch_axes over B). Returns (y, aux)."""
+    B, S, d = x.shape
+    tp = mesh.shape["model"]
+    assert dims.num_experts % tp == 0, (dims.num_experts, tp)
+    num_local = dims.num_experts // tp
+    x_spec = P(batch_axes if batch_axes else None, None, None)
+    w_spec = {
+        "router": P(None, None),
+        "wi": P("model", fsdp_axis, ffn2d_axis),
+        "wg": P("model", fsdp_axis, ffn2d_axis),
+        "wo": P("model", ffn2d_axis, fsdp_axis),
+    }
+
+    if ffn2d_axis is None:
+        body = partial(_moe_body_ep, dims=dims, num_local=num_local,
+                       fsdp_axis=fsdp_axis, batch_axes=batch_axes)
+    else:
+        body = partial(_moe_body_ep2d, dims=dims, num_local=num_local,
+                       ffn2d_axis=ffn2d_axis, chunk_tokens=chunk_tokens,
+                       batch_axes=batch_axes)
+
+    # full-manual over the mesh; under multi-pod training the pod dim is
+    # handled by vmap(spmd_axis_name="pod") outside (grad_compress.py), whose
+    # batching rule extends these specs with the pod axis automatically.
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(w_spec, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(params, x)
+    return y, aux
+
+
+def _capacity(tokens: int, dims: MoEDims) -> int:
+    c = int(math.ceil(tokens * dims.top_k * dims.capacity_factor / dims.num_experts))
+    return max(4, c)
+
+
+def _moe_body_ep(params, x, *, dims: MoEDims, num_local: int, fsdp_axis,
+                 batch_axes):
+    """Per-device body, mode ``ep``.
+
+    Standard: x [B_loc, S, d] replicated over model (TP-style layers).
+    DP-major (§Perf): the batch itself is sharded over model — tokens are
+    all-gathered over the model column so each expert-owning rank can serve
+    them, and the combined output is psummed then sliced back."""
+    gather_model = "model" in batch_axes
+    if fsdp_axis is not None:   # ZeRO-3: gather this layer's expert weights
+        params = dict(params)
+        for k in ("wi", "wg"):
+            params[k] = lax.all_gather(params[k], fsdp_axis, axis=1, tiled=True)
+        params["wo"] = lax.all_gather(params["wo"], fsdp_axis, axis=2, tiled=True)
+    B, S, d = x.shape
+    if gather_model:
+        x = lax.all_gather(x, "model", axis=0, tiled=True)   # [B*tp, S, d]
+    Bg = x.shape[0]
+    T = Bg * S
+    e_lo = lax.axis_index("model") * num_local
+    y, aux = _moe_local(x.reshape(T, d), params, dims, e_lo, num_local,
+                        _capacity(T, dims))
+    if gather_model:
+        # each rank only needs its own batch slice back: reduce-scatter
+        # (half the wire of psum+slice, and no full-batch transient)
+        y = lax.psum_scatter(y.reshape(Bg, S, d), "model",
+                             scatter_dimension=0, tiled=True)
+    else:
+        y = lax.psum(y, "model").reshape(Bg, S, d)
+    # routing is identical across model ranks (single copy); mean over batch
+    aux = lax.psum(aux, "model") / lax.axis_size("model")
+    if batch_axes:
+        aux = lax.pmean(aux, batch_axes)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_body_ep2d(params, x, *, dims: MoEDims, num_local: int, ffn2d_axis,
+                   chunk_tokens: int, batch_axes):
+    """Per-device body, mode ``ep2d``: expert d_ff sharded over `ffn2d_axis`.
+
+    Tokens are all-gathered over the ffn2d axis in chunks; the GLU runs on the
+    local d_ff slice; one psum over (ffn2d, model) combines partial outputs.
+    """
+    B, S, d = x.shape
+    T = B * S
+    dp = lax.axis_size(ffn2d_axis)
+    my_rank = lax.axis_index(ffn2d_axis)
+    e_lo = lax.axis_index("model") * num_local
+    nchunks = max(1, (T + chunk_tokens - 1) // chunk_tokens)
+    while T % nchunks:
+        nchunks += 1
+    csize = T // nchunks
+    x2d = x.reshape(T, d)
+
+    def chunk_step(aux, ci):
+        xc = lax.dynamic_slice_in_dim(x2d, ci * csize, csize, axis=0)
+        xc_all = lax.all_gather(xc, ffn2d_axis, axis=0, tiled=True)  # [csize*dp, d]
+        yc, a = _moe_local(xc_all, params, dims, e_lo, num_local,
+                           _capacity(csize * dp, dims))
+        yc = lax.psum(yc, (ffn2d_axis, "model"))
+        yc_mine = lax.dynamic_slice_in_dim(yc, my_rank * csize, csize, axis=0)
+        return aux + a, yc_mine
+
+    aux, ys = lax.scan(chunk_step, jnp.float32(0.0), jnp.arange(nchunks))
+    y = ys.reshape(T, d)
+    aux = aux / nchunks
+    if batch_axes:
+        aux = lax.pmean(aux, batch_axes)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,242 @@
+"""xLSTM: pair-scanned (mLSTM, sLSTM) blocks — 12 layers = 6 pairs.
+
+mLSTM: matrix memory [dk, dv] per head with sigmoid exponential-free gating,
+run through the shared chunked linear-attention core (O(1)-in-seq state ⇒
+long_500k applicable). sLSTM: scalar memory with hidden-state recurrence
+(inherently sequential; time-scan). See DESIGN.md §4 for deviations from the
+published 7:1 block ratio (we pair-scan 1:1).
+
+Sharding: xlstm-125m is DP/FSDP-only by design — at 125 M params TP buys
+nothing; the `model` mesh axis is idle (EXPERIMENTS.md notes this; the
+long_500k hillclimb revisits it)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.api import Model
+from repro.models.common import (
+    Spec, axes_tree, chunked_loss, embed_specs, embed_tokens, init_tree,
+    lm_head, rmsnorm, stacked, DEFAULT_DTYPE,
+)
+from repro.models.linear_core import (
+    chunked_linear_attention, linear_attention_step,
+)
+
+
+def _mlstm_specs(d: int, nh: int, d_in: int, hd: int) -> Dict[str, Spec]:
+    return {
+        "ln": Spec((d,), ("embed",), "ones"),
+        "w_up": Spec((d, 2 * d_in), ("fsdp", None), fan_in=d),
+        "wq": Spec((d_in, nh, hd), ("fsdp", None, None), fan_in=d_in),
+        "wk": Spec((d_in, nh, hd), ("fsdp", None, None), fan_in=d_in),
+        "wv": Spec((d_in, nh, hd), ("fsdp", None, None), fan_in=d_in),
+        "w_gates": Spec((d_in, 2 * nh), ("fsdp", None), fan_in=d_in,
+                        dtype=jnp.float32),
+        "b_gates": Spec((2 * nh,), (None,), "zeros", dtype=jnp.float32),
+        "w_down": Spec((d_in, d), (None, "fsdp"), fan_in=d_in),
+    }
+
+
+def _slstm_specs(d: int) -> Dict[str, Spec]:
+    return {
+        "ln": Spec((d,), ("embed",), "ones"),
+        "w": Spec((d, 4 * d), ("fsdp", None), fan_in=d),
+        "r": Spec((d, 4 * d), ("fsdp", None), fan_in=d),
+        "b": Spec((4 * d,), (None,), "zeros"),
+        "w_out": Spec((d, d), ("fsdp", None), fan_in=d),
+    }
+
+
+def _mlstm_gates(p, c_in):
+    """Returns (log_f, log_i) per head, both <= ~0 (sigmoid gating)."""
+    raw = c_in.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    nh = raw.shape[-1] // 2
+    log_f = jax.nn.log_sigmoid(raw[..., :nh] + 4.0)   # bias toward remembering
+    log_i = jax.nn.log_sigmoid(raw[..., nh:])
+    return log_f, log_i
+
+
+def _mlstm_qkv(p, c_in, scale):
+    q = jnp.einsum("bsd,dhk->bshk", c_in, p["wq"]) * scale
+    k = jnp.einsum("bsd,dhk->bshk", c_in, p["wk"]) * scale
+    v = jnp.einsum("bsd,dhk->bshk", c_in, p["wv"])
+    return q, k, v
+
+
+def _mlstm_seq(p, x, state, chunk):
+    """Full-sequence mLSTM block. state: (S [B,nh,hd,hd], n [B,nh,hd])."""
+    B, S, d = x.shape
+    h = rmsnorm(x, p["ln"])
+    up = h @ p["w_up"]
+    d_in = up.shape[-1] // 2
+    c_in, z = up[..., :d_in], up[..., d_in:]
+    nh, hd = p["wq"].shape[1], p["wq"].shape[2]
+    q, k, v = _mlstm_qkv(p, c_in, hd ** -0.5)
+    log_f, log_i = _mlstm_gates(p, c_in)
+    Sm, Nm = state
+    y, Sm = chunked_linear_attention(q, k, v, log_f, log_i, chunk=chunk,
+                                     initial_state=Sm)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    nrm, Nm2 = chunked_linear_attention(q, k, ones, log_f, log_i, chunk=chunk,
+                                        initial_state=Nm[..., None])
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0).astype(y.dtype)
+    y = y.reshape(B, S, nh * hd) * jax.nn.silu(z)
+    return x + y @ p["w_down"], (Sm, Nm2[..., 0])
+
+
+def _mlstm_step(p, x, state):
+    """One-token mLSTM. x: [B,1,d]."""
+    B = x.shape[0]
+    h = rmsnorm(x, p["ln"])
+    up = h @ p["w_up"]
+    d_in = up.shape[-1] // 2
+    c_in, z = up[..., :d_in], up[..., d_in:]
+    nh, hd = p["wq"].shape[1], p["wq"].shape[2]
+    q, k, v = _mlstm_qkv(p, c_in, hd ** -0.5)
+    log_f, log_i = _mlstm_gates(p, c_in)
+    Sm, Nm = state
+    sq = lambda a: a[:, 0]
+    y, Sm = linear_attention_step(Sm, sq(q), sq(k), sq(v), sq(log_f), sq(log_i))
+    nrm, Nm = linear_attention_step(Nm[..., None], sq(q), sq(k),
+                                    jnp.ones((B, nh, 1), v.dtype),
+                                    sq(log_f), sq(log_i))
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0).astype(y.dtype)
+    y = y.reshape(B, 1, nh * hd) * jax.nn.silu(z)
+    return x + y @ p["w_down"], (Sm, Nm[..., 0])
+
+
+def _slstm_cell(p, x_t, carry):
+    """One sLSTM step. x_t: [B,d]; carry: (c, n, h, m) each [B,d] fp32."""
+    c, n, h, m = carry
+    raw = (x_t.astype(jnp.float32) @ p["w"].astype(jnp.float32)
+           + h @ p["r"].astype(jnp.float32) + p["b"].astype(jnp.float32))
+    d = x_t.shape[-1]
+    zi, ii, fi, oi = (raw[..., :d], raw[..., d:2 * d],
+                      raw[..., 2 * d:3 * d], raw[..., 3 * d:])
+    log_f = jax.nn.log_sigmoid(fi + 4.0)
+    log_i = jax.nn.log_sigmoid(ii)
+    m_new = jnp.maximum(log_f + m, log_i)
+    fp = jnp.exp(log_f + m - m_new)
+    ip = jnp.exp(log_i - m_new)
+    c = fp * c + ip * jnp.tanh(zi)
+    n = fp * n + ip
+    h_new = jax.nn.sigmoid(oi) * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new
+
+
+def _slstm_seq(p, x, state):
+    B, S, d = x.shape
+    h0 = rmsnorm(x, p["ln"])
+
+    def step(carry, x_t):
+        carry, h_t = _slstm_cell(p, x_t, carry)
+        return carry, h_t
+
+    state, hs = lax.scan(step, state, h0.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype) @ p["w_out"]
+    return x + y, state
+
+
+def _slstm_step(p, x, state):
+    h = rmsnorm(x, p["ln"])
+    state, h_t = _slstm_cell(p, h[:, 0], state)
+    return x + (h_t.astype(x.dtype) @ p["w_out"])[:, None, :], state
+
+
+def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
+          chunk: int = 256, **_) -> Model:
+    d, L = cfg.d_model, cfg.num_layers
+    assert L % 2 == 0, "xlstm pair-scan needs an even layer count"
+    npairs = L // 2
+    nh = cfg.num_heads
+    d_in = 2 * d
+    hd = d_in // nh
+    eps = cfg.norm_eps
+    V = cfg.padded(mesh.shape.get("model", 1)).vocab_size
+
+    pair_specs = {"m": _mlstm_specs(d, nh, d_in, hd), "s": _slstm_specs(d)}
+    specs = {"embed": embed_specs(V, d), "pairs": stacked(pair_specs, npairs)}
+
+    def pair_seq(x, pp, state, chunk_):
+        x, mstate = _mlstm_seq(pp["m"], x, state["m"], chunk_)
+        x, sstate = _slstm_seq(pp["s"], x, state["s"])
+        return x, {"m": mstate, "s": sstate}
+
+    def _zero_state(B):
+        return {
+            "m": (jnp.zeros((npairs, B, nh, hd, hd), jnp.float32),
+                  jnp.zeros((npairs, B, nh, hd), jnp.float32)),
+            "s": tuple(jnp.zeros((npairs, B, d), jnp.float32) for _ in range(4)),
+        }
+
+    def _run_seq(params, x, state, chunk_):
+        def body(x, xs):
+            pp, st_m0, st_m1, st_s = xs
+            x, st = pair_seq(x, pp, {"m": (st_m0, st_m1), "s": st_s}, chunk_)
+            return x, (st["m"][0], st["m"][1], st["s"])
+        if remat != "none":
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, (m0, m1, s) = lax.scan(
+            body, x, (params["pairs"], state["m"][0], state["m"][1], state["s"]))
+        return x, {"m": (m0, m1), "s": s}
+
+    def loss_fn(params, batch):
+        x = embed_tokens(params["embed"], batch["tokens"])
+        state = _zero_state(x.shape[0])
+        x, _ = _run_seq(params, x, state, chunk)
+        return chunked_loss(params["embed"], x, batch["labels"], eps)
+
+    def prefill(params, batch, max_len=None):
+        x = embed_tokens(params["embed"], batch["tokens"])
+        B = x.shape[0]
+        state = _zero_state(B)
+        x, state = _run_seq(params, x, state, chunk)
+        logits = lm_head(params["embed"], x[:, -1:, :], eps)[:, 0]
+        state["lengths"] = jnp.full((B,), x.shape[1], jnp.int32)
+        return logits, state
+
+    def decode_step(params, cache, tokens, lengths):
+        x = embed_tokens(params["embed"], tokens)
+
+        def body(x, xs):
+            pp, st_m0, st_m1, st_s = xs
+            x, mstate = _mlstm_step(pp["m"], x, (st_m0, st_m1))
+            x, sstate = _slstm_step(pp["s"], x, st_s)
+            return x, (mstate[0], mstate[1], sstate)
+
+        x, (m0, m1, s) = lax.scan(
+            body, x, (params["pairs"], cache["m"][0], cache["m"][1], cache["s"]))
+        logits = lm_head(params["embed"], x, eps)[:, 0]
+        return logits, {"m": (m0, m1), "s": s, "lengths": lengths + 1}
+
+    def init_cache(batch: int, max_len: int):
+        st = _zero_state(batch)
+        st["lengths"] = jnp.zeros((batch,), jnp.int32)
+        return st
+
+    def cache_axes(batch: int, max_len: int):
+        return {
+            "m": ((None, "batch", None, None, None), (None, "batch", None, None)),
+            "s": tuple((None, "batch", None) for _ in range(4)),
+            "lengths": ("batch",),
+        }
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: init_tree(rng, specs),
+        param_axes=axes_tree(specs),
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_axes=cache_axes,
+        extras={},
+    )

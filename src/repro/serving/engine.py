@@ -1,0 +1,196 @@
+"""LM serving engine: continuous batching with Clipper admission control.
+
+Requests (token prompts) enter an AIMD-governed admission queue (paper §4.3
+applied to prefill); admitted prompts are prefilled in bucket-padded batches
+and parked in decode *slots*; every engine step advances all active slots by
+one token through a single jitted decode step (continuous batching). Slot
+caches live in one donated buffer, so decode never reallocates.
+
+This is deliberately the same architecture a TPU pod would run — the jitted
+prefill/decode functions come from launch/steps.py-style builders with the
+production shardings; here they execute on the local mesh."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.batching import AIMDController, bucket
+from repro.distributed.sharding import sharding_context
+from repro.models.api import Model
+from repro.serving.sampler import sample
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_time: float
+    tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    slot: Optional[int] = None
+    prefill_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+
+class LMServer:
+    """Continuous-batching server for one Model."""
+
+    def __init__(self, model: Model, mesh, rules, *, slots: int = 8,
+                 max_len: int = 256, slo: float = 0.5,
+                 temperature: float = 0.0, eos_token: int = -1,
+                 seed: int = 0):
+        self.model = model
+        self.mesh = mesh
+        self.rules = rules
+        self.slots = slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.eos = eos_token
+        self.admission = AIMDController(slo, additive=1, init=1,
+                                        max_batch=slots)
+        self.rng = jax.random.PRNGKey(seed)
+        self._queue: List[Request] = []
+        self._active: Dict[int, Request] = {}      # slot -> request
+        self._next_id = 0
+        self.completed: Dict[int, Request] = {}
+
+        self.cache = model.init_cache(slots, max_len)
+        self.lengths = jnp.zeros((slots,), jnp.int32)
+        self.cur_tokens = jnp.zeros((slots, 1), jnp.int32)
+
+        def decode_fn(params, cache, tokens, lengths, key):
+            with sharding_context(mesh, rules):
+                logits, cache = model.decode_step(params, cache, tokens, lengths)
+            toks = sample(logits, key, temperature=temperature)
+            return toks, cache
+
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._prefill_cache: Dict[int, Any] = {}   # bucket -> jitted prefill
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               now: Optional[float] = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new_tokens,
+                                   time.perf_counter() if now is None else now))
+        return rid
+
+    def _prefill_jit(self, b: int, plen: int):
+        key = (b, plen)
+        if key not in self._prefill_cache:
+            def fn(params, tokens):
+                with sharding_context(self.mesh, self.rules):
+                    return self.model.prefill(params, {"tokens": tokens},
+                                              max_len=self.max_len)
+            self._prefill_cache[key] = jax.jit(fn)
+        return self._prefill_cache[key]
+
+    def _admit(self, params) -> None:
+        free = [s for s in range(self.slots) if s not in self._active]
+        if not free or not self._queue:
+            return
+        n = min(len(free), len(self._queue), self.admission.max_batch_size)
+        # admit a same-length group (prefill has no per-sample prompt masking;
+        # grouping by length avoids junk-token attention)
+        plen = len(self._queue[0].prompt)
+        batch = []
+        for r in list(self._queue):
+            if len(r.prompt) == plen and len(batch) < n:
+                batch.append(r)
+                self._queue.remove(r)
+        n = len(batch)
+        nb = bucket(n, cap=self.slots)
+        toks = np.zeros((nb, plen), np.int32)
+        for i, r in enumerate(batch):
+            toks[i] = r.prompt
+        t0 = time.perf_counter()
+        logits, pcache = self._prefill_jit(nb, plen)(
+            params, jnp.asarray(toks))
+        jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.admission.record(n, dt)
+        self.rng, k = jax.random.split(self.rng)
+        first = sample(logits, k, temperature=self.temperature)
+        first = np.asarray(first)
+        # scatter prefilled caches into decode slots
+        for i, r in enumerate(batch):
+            s = free[i]
+            r.slot = s
+            r.prefill_time = dt
+            r.tokens.append(int(first[i]))
+            self._active[s] = r
+            self.cache = _scatter_cache(self.cache, pcache, i, s)
+            self.lengths = self.lengths.at[s].set(plen)
+            self.cur_tokens = self.cur_tokens.at[s, 0].set(int(first[i]))
+
+    def _decode_once(self, params) -> None:
+        if not self._active:
+            return
+        self.rng, k = jax.random.split(self.rng)
+        toks, self.cache = self._decode(params, self.cache, self.cur_tokens,
+                                        self.lengths, k)
+        toks = np.asarray(toks)
+        self.lengths = self.lengths + jnp.asarray(
+            [1 if s in self._active else 0 for s in range(self.slots)],
+            jnp.int32)
+        for s, r in list(self._active.items()):
+            t = int(toks[s])
+            r.tokens.append(t)
+            self.cur_tokens = self.cur_tokens.at[s, 0].set(t)
+            if (t == self.eos or len(r.tokens) >= r.max_new_tokens
+                    or int(self.lengths[s]) >= self.max_len - 1):
+                r.done = True
+                r.finish_time = time.perf_counter()
+                self.completed[r.request_id] = r
+                del self._active[s]
+
+    def step(self, params) -> None:
+        self._admit(params)
+        self._decode_once(params)
+
+    def run(self, params, *, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self._queue or self._active) and steps < max_steps:
+            self.step(params)
+            steps += 1
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "completed": len(self.completed),
+            "admission_max_batch": self.admission.max_batch_size,
+        }
+
+
+def _scatter_cache(cache, pcache, src: int, dst: int):
+    """Copy request ``src`` of a prefill cache into slot ``dst``."""
+    out = {}
+    for k, v in cache.items():
+        pv = pcache[k]
+        if isinstance(v, tuple):
+            out[k] = tuple(_scatter_leaf(a, b, src, dst) for a, b in zip(v, pv))
+        else:
+            out[k] = _scatter_leaf(v, pv, src, dst)
+    return out
+
+
+def _scatter_leaf(dst_arr, src_arr, src: int, dst: int):
+    if dst_arr.ndim == 1:                   # lengths [B]
+        return dst_arr.at[dst].set(src_arr[src])
+    # layer-stacked [L, B, ...]: batch is dim 1
+    sl = src_arr[:, src]
+    if dst_arr.ndim > 2:
+        pad = dst_arr.shape[2] - sl.shape[1]
+        if pad > 0:
+            sl = jnp.pad(sl, [(0, 0), (0, pad)] + [(0, 0)] * (sl.ndim - 2))
+    return dst_arr.at[:, dst].set(sl.astype(dst_arr.dtype))

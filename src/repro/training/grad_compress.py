@@ -1,0 +1,94 @@
+"""Gradient computation with microbatch accumulation and (optionally)
+int8-quantized cross-pod reduction.
+
+Within a pod, gradients reduce through XLA's normal sharding propagation
+(reduce-scatter/all-reduce over the ``data`` axis). *Across pods* — the slow
+inter-pod links — per-pod gradients are computed with
+``jax.vmap(..., spmd_axis_name="pod")`` over an explicit pod dimension, so
+autodiff never inserts its own fp32 pod all-reduce; the stacked gradients
+are then quantized and summed over the pod axis:
+
+    scale = max|g| / 127                  (per tensor, scalar collective)
+    q     = round(g / scale)    : int8
+    sum   = Σ_pods int16(q)               (int16 on the wire: exact for
+                                           <= 256 pods, 2x fewer bytes
+                                           than the fp32 baseline)
+    g     = sum * scale / n_pods
+
+The int16 wire format is visible in the compiled HLO (s16 all-reduce over
+the pod replica groups) and its collective-term effect is recorded in
+EXPERIMENTS.md §Perf."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _accumulate(loss_fn: Callable, params, batch, num_microbatches: int):
+    """Gradient accumulation over microbatches (fp32 accumulators)."""
+    if num_microbatches <= 1:
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, jax.tree.map(lambda x: x.astype(jnp.float32), g)
+
+    mbs = jax.tree.map(
+        lambda x: x.reshape((num_microbatches, x.shape[0] // num_microbatches)
+                            + x.shape[1:]), batch)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        acc_loss, acc_g = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        acc_g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+        return (acc_loss + loss, acc_g), None
+
+    (loss, g), _ = lax.scan(body, (jnp.float32(0.0), zeros), mbs)
+    inv = 1.0 / num_microbatches
+    return loss * inv, jax.tree.map(lambda x: x * inv, g)
+
+
+def _quantized_pod_mean(g: jax.Array) -> jax.Array:
+    """g: [npods, ...] (dim 0 sharded over pod) -> mean over pods, int8
+    payload / int16 accumulator on the inter-pod wire."""
+    npods = g.shape[0]
+    gf = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(gf))                         # scalar collective
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    total = jnp.sum(q.astype(jnp.int16), axis=0)        # s16 all-reduce on wire
+    return total.astype(jnp.float32) * (scale / npods)
+
+
+def loss_and_grads(loss_fn: Callable, params, batch, mesh, *,
+                   num_microbatches: int = 1,
+                   pod_compress: bool = True) -> Tuple[jax.Array, Any]:
+    """Returns (loss, fp32 grads), pod-reduced (compressed when enabled)."""
+    multi_pod = "pod" in mesh.shape and mesh.shape["pod"] > 1
+    if not multi_pod:
+        return _accumulate(loss_fn, params, batch, num_microbatches)
+
+    npods = mesh.shape["pod"]
+
+    def fold(x):
+        x = x.reshape((npods, x.shape[0] // npods) + x.shape[1:])
+        spec = P("pod", "data", *([P.UNCONSTRAINED] * (x.ndim - 2)))
+        return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    batch_p = jax.tree.map(fold, batch)
+    per_pod = lambda b: _accumulate(loss_fn, params, b, num_microbatches)
+    losses, grads = jax.vmap(per_pod, spmd_axis_name="pod")(batch_p)
+
+    def stack_spec(g):
+        return lax.with_sharding_constraint(
+            g, NamedSharding(mesh, P("pod", *([P.UNCONSTRAINED] * (g.ndim - 1)))))
+
+    grads = jax.tree.map(stack_spec, grads)
+    if pod_compress:
+        grads = jax.tree.map(_quantized_pod_mean, grads)
+    else:
+        grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+    return jnp.mean(losses), grads

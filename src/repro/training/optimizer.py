@@ -1,0 +1,142 @@
+"""Optimizers built from scratch (no optax in this environment).
+
+AdamW keeps fp32 moments + fp32 master weights for bf16 params (mixed
+precision); Adafactor offers the low-memory alternative for the 1T-param
+config. State trees mirror the param tree so the same logical-axes sharding
+applies (DESIGN.md §6)."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any          # fp32 master copy of params (None if params fp32)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    step = state.step + 1
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)) + 1e-12)
+    scale = jnp.minimum(1.0, grad_clip / gnorm)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        w = w - lr * (u + weight_decay * w)
+        return m, v, w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_w = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    old_flat = treedef.flatten_up_to(params)
+    new_params = jax.tree.unflatten(
+        treedef, [w.astype(p.dtype) for w, p in zip([o[2] for o in out], old_flat)])
+    return new_params, AdamWState(step, m, v, master), gnorm
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any              # row second-moment (or full v for <2D tensors)
+    vc: Any              # col second-moment
+
+
+def adafactor_init(params) -> AdafactorState:
+    def rows(p):
+        if p.ndim < 2:
+            return jnp.zeros(p.shape, jnp.float32)
+        return jnp.zeros(p.shape[:-1], jnp.float32)
+
+    def cols(p):
+        if p.ndim < 2:
+            return jnp.zeros((), jnp.float32)
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(rows, params),
+                          vc=jax.tree.map(cols, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, *, lr,
+                     decay=0.8, eps=1e-30, clip=1.0):
+    step = state.step + 1
+    beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim < 2:
+            vr = beta * vr + (1 - beta) * g2
+            u = g / jnp.sqrt(vr)
+        else:
+            vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :])
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip)
+        return vr, vc, (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_vr = treedef.flatten_up_to(state.vr)
+    flat_vc = treedef.flatten_up_to(state.vc)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, vr, vc, p) for g, vr, vc, p in
+           zip(flat_g, flat_vr, flat_vc, flat_p)]
+    vr = jax.tree.unflatten(treedef, [o[0] for o in out])
+    vc = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_params = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, AdafactorState(step, vr, vc), jnp.float32(0.0)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def opt_state_axes(opt_state, param_axes):
+    """Logical axes for optimizer state (mirrors params; scalars -> ())."""
+    if isinstance(opt_state, AdamWState):
+        return AdamWState(step=(), m=param_axes,
+                          v=param_axes, master=param_axes)
+    if isinstance(opt_state, AdafactorState):
+        def drop_last(axes):
+            return axes[:-1] if len(axes) >= 2 else axes
+        def drop_2nd_last(axes):
+            return (axes[:-2] + axes[-1:]) if len(axes) >= 2 else ()
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+        vr = jax.tree.map(drop_last, param_axes, is_leaf=is_axes)
+        vc = jax.tree.map(drop_2nd_last, param_axes, is_leaf=is_axes)
+        return AdafactorState(step=(), vr=vr, vc=vc)
+    raise TypeError(type(opt_state))

@@ -1,0 +1,156 @@
+"""Training loop substrate: step factory + fault-tolerant driver.
+
+``make_train_step`` builds the jitted SPMD step used by both the real
+trainer and the multi-pod dry-run (identical code path — the dry-run just
+lowers it against ShapeDtypeStructs). The driver adds checkpoint/restart
+(elastic re-shard on load), periodic eval, and NaN-step skipping."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (
+    ShardingContext, params_shardings, sharding_context,
+)
+from repro.launch.inputs import batch_axes_tree
+from repro.training import optimizer as opt_lib
+from repro.training.grad_compress import loss_and_grads
+
+
+@dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    num_microbatches: int = 1
+    optimizer: str = "adamw"          # adamw | adafactor
+    pod_compress: bool = True
+    skip_nan_steps: bool = True
+
+
+def make_train_step(model, mesh, rules, tc: TrainConfig):
+    """Returns (train_step, init_opt_state, shardings dict)."""
+    ctx = ShardingContext(mesh, rules)
+    schedule = opt_lib.cosine_schedule(tc.lr, tc.warmup_steps, tc.total_steps)
+
+    if tc.optimizer == "adamw":
+        opt_init, opt_update = opt_lib.adamw_init, partial(
+            opt_lib.adamw_update, weight_decay=tc.weight_decay,
+            grad_clip=tc.grad_clip)
+    else:
+        opt_init, opt_update = opt_lib.adafactor_init, opt_lib.adafactor_update
+
+    def train_step(params, opt_state, batch):
+        with sharding_context(mesh, rules):
+            loss, grads = loss_and_grads(
+                model.loss_fn, params, batch, mesh,
+                num_microbatches=tc.num_microbatches,
+                pod_compress=tc.pod_compress)
+            lr = schedule(opt_state.step)
+            new_params, new_opt, gnorm = opt_update(grads, opt_state, params,
+                                                    lr=lr)
+            if tc.skip_nan_steps:
+                ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+                new_params = jax.tree.map(
+                    lambda n, o: jnp.where(ok, n, o), new_params, params)
+                new_opt = jax.tree.map(
+                    lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
+            return new_params, new_opt, {"loss": loss, "gnorm": gnorm, "lr": lr}
+
+    param_sh = params_shardings(model.param_axes, ctx)
+    opt_axes_fn = opt_lib.opt_state_axes
+
+    def shardings_for(opt_state_shape):
+        opt_axes = opt_axes_fn(opt_state_shape, model.param_axes)
+        return {
+            "params": param_sh,
+            "opt": params_shardings(opt_axes, ctx),
+        }
+
+    return train_step, opt_init, shardings_for
+
+
+def jit_train_step(model, mesh, rules, tc: TrainConfig, batch_specs,
+                   batch_rules=None):
+    """Fully-specified jit of the train step (used by trainer and dry-run).
+
+    ``rules`` govern the model internals (pod-free under pod compression);
+    ``batch_rules`` govern how the global batch arrives (may include pod)."""
+    ctx = ShardingContext(mesh, rules)
+    ctx_batch = ShardingContext(mesh, batch_rules or rules)
+    train_step, opt_init, shardings_for = make_train_step(model, mesh, rules, tc)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(opt_init, params_shape)
+    sh = shardings_for(opt_shape)
+    batch_axes = batch_axes_tree(batch_specs)
+    batch_sh = jax.tree.map(
+        lambda ax: ctx_batch.sharding(ax), batch_axes,
+        is_leaf=lambda x: isinstance(x, tuple))
+    metrics_sh = {"loss": ctx.sharding(()), "gnorm": ctx.sharding(()),
+                  "lr": ctx.sharding(())}
+    step = jax.jit(
+        train_step,
+        in_shardings=(sh["params"], sh["opt"], batch_sh),
+        out_shardings=(sh["params"], sh["opt"], metrics_sh),
+        donate_argnums=(0, 1),
+    )
+    return step, opt_init, sh, batch_sh
+
+
+def train(model, mesh, rules, tc: TrainConfig, data_iter, *,
+          num_steps: int, checkpoint_dir: Optional[str] = None,
+          checkpoint_every: int = 100, resume: bool = True,
+          log_every: int = 10, rng_seed: int = 0,
+          hooks: Optional[Dict[str, Callable]] = None) -> Dict[str, Any]:
+    """Fault-tolerant training driver (checkpoint/restart, elastic reshard)."""
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    ctx = ShardingContext(mesh, rules)
+    first = next(data_iter)
+    batch_specs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), first)
+    step_fn, opt_init, sh, batch_sh = jit_train_step(
+        model, mesh, rules, tc, batch_specs)
+
+    start_step = 0
+    ckpt = Checkpointer(checkpoint_dir) if checkpoint_dir else None
+    if ckpt and resume and ckpt.latest_step() is not None:
+        start_step = ckpt.latest_step()
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(rng_seed))
+        params = ckpt.restore(start_step, "params", params_shape, sh["params"])
+        opt_state = ckpt.restore(
+            start_step, "opt", jax.eval_shape(opt_init, params_shape),
+            sh["opt"])
+    else:
+        with sharding_context(mesh, rules):
+            params = jax.jit(model.init, out_shardings=sh["params"])(
+                jax.random.PRNGKey(rng_seed))
+            opt_state = jax.jit(opt_init, out_shardings=sh["opt"])(params)
+
+    history = []
+    batch = first
+    for i in range(start_step, num_steps):
+        batch_dev = jax.device_put(batch, batch_sh)
+        params, opt_state, metrics = step_fn(params, opt_state, batch_dev)
+        if (i + 1) % log_every == 0 or i == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i + 1
+            history.append(m)
+            if hooks and "on_log" in hooks:
+                hooks["on_log"](m)
+        if ckpt and ((i + 1) % checkpoint_every == 0 or i == num_steps - 1):
+            ckpt.save(i + 1, {"params": params, "opt": opt_state})
+        try:
+            batch = next(data_iter)
+        except StopIteration:
+            break
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,23 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the single real CPU
+device; only launch/dryrun.py forces 512 placeholder devices."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def local_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def train_rules_1d():
+    from repro.distributed.sharding import train_rules
+    return train_rules(multi_pod=False)
+
+
+@pytest.fixture(scope="session")
+def serve_rules_1d():
+    from repro.distributed.sharding import serve_rules
+    return serve_rules(multi_pod=False)

@@ -1,0 +1,84 @@
+"""Adaptive batching: AIMD + quantile regression + queues (paper §4.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batching import (AIMDController, BatchQueue, FixedController,
+                                 QuantileRegressionController, bucket)
+from repro.core.interfaces import Query
+
+
+def _run_to_convergence(ctrl, latency_fn, iters=400):
+    for _ in range(iters):
+        b = ctrl.max_batch_size
+        ctrl.record(b, latency_fn(b))
+    return ctrl.max_batch_size
+
+
+def test_aimd_converges_to_slo_boundary():
+    """latency = 1ms + 0.5ms*b, SLO 20ms -> optimum b = 38; AIMD oscillates
+    in a one-backoff band around it."""
+    ctrl = AIMDController(0.020, additive=2, backoff=0.9)
+    lat = lambda n: 0.001 + 0.0005 * n
+    b = _run_to_convergence(ctrl, lat)
+    assert 34 <= b <= 40
+    assert lat(int(b * 0.9)) <= 0.020       # one backoff puts it under SLO
+
+
+def test_aimd_adapts_downward():
+    """After convergence, a slowdown (paper: GC pause / replica change)
+    drives the max batch size back down."""
+    ctrl = AIMDController(0.020)
+    _run_to_convergence(ctrl, lambda n: 0.001 + 0.0005 * n)
+    b_fast = ctrl.max_batch_size
+    b_slow = _run_to_convergence(ctrl, lambda n: 0.001 + 0.002 * n)
+    assert b_slow < b_fast
+    assert 0.001 + 0.002 * b_slow <= 0.020 * 1.15
+
+
+def test_quantile_regression_close_to_aimd():
+    """Fig 4: the two strategies find similar operating points."""
+    lat = lambda n: 0.001 + 0.0005 * n
+    a = _run_to_convergence(AIMDController(0.020), lat)
+    q = QuantileRegressionController(0.020)
+    rng = np.random.default_rng(0)
+    for _ in range(600):
+        b = max(1, int(rng.integers(1, max(2, q.max_batch_size + 4))))
+        q.record(b, lat(b) * (1 + abs(rng.normal(0, 0.02))))
+    assert abs(q.max_batch_size - a) <= max(8, int(0.35 * a))
+
+
+@given(st.integers(1, 5000))
+def test_bucket_pow2(n):
+    b = bucket(n)
+    assert b >= n
+    assert b < 2 * n or b == 1
+    assert b & (b - 1) == 0 or n > 4096
+
+
+@given(st.floats(0.002, 0.1), st.floats(1e-5, 1e-3), st.floats(1e-6, 1e-4))
+@settings(max_examples=40, deadline=None)
+def test_aimd_never_exceeds_slo_steady_state(slo, base, per_item):
+    """Property: once converged, latency at the chosen batch size is within
+    one backoff step of the SLO for any linear latency profile."""
+    ctrl = AIMDController(slo, additive=1, backoff=0.9)
+    lat = lambda n: base + per_item * n
+    b = _run_to_convergence(ctrl, lat, iters=800)
+    if lat(1) > slo:            # SLO unattainable: pinned at 1
+        assert b == 1
+    else:
+        assert lat(max(1, int(b * 0.9) - 1)) <= slo * 1.05
+
+
+def test_batch_queue_delay_and_admission():
+    ctrl = FixedController(4)
+    q = BatchQueue(ctrl, batch_delay=0.002)
+    q.put(Query(0, None, arrival_time=0.0))
+    assert not q.ready(0.001)            # delaying for more arrivals
+    assert q.ready(0.0025)               # delay elapsed
+    for i in range(1, 5):
+        q.put(Query(i, None, arrival_time=0.001))
+    assert q.ready(0.001)                # full batch short-circuits the delay
+    batch = q.next_batch(0.001)
+    assert len(batch) == 4 and len(q) == 1

@@ -1,0 +1,95 @@
+"""End-to-end Clipper frontend behaviour (paper §3 + §5.2.2 + §4.2)."""
+
+import numpy as np
+import pytest
+
+from repro.core import Feedback, linear_latency, make_clipper
+from repro.core.selection import exp4_weights
+
+
+def _models(rng):
+    def good(x):
+        return np.eye(3)[np.abs(x).sum(1).astype(int) % 3]
+
+    def bad(x):
+        return rng.normal(size=(len(x), 3))
+
+    return {"good": good, "bad": bad}
+
+
+def _trace(rng, n, gap=0.002):
+    return [(i * gap, rng.normal(size=(4,)).astype(np.float32), 0)
+            for i in range(n)]
+
+
+def test_slo_bounded_latency_under_stragglers():
+    rng = np.random.default_rng(0)
+    clip = make_clipper(
+        _models(rng), "exp4", slo=0.02,
+        latency_models={"good": linear_latency(0.001, 1e-4),
+                        "bad": linear_latency(0.002, 2e-4, p_straggle=0.05,
+                                              straggle_factor=30)})
+    qids = clip.replay(_trace(rng, 300))
+    lat = np.array([clip.results[q].latency for q in qids])
+    assert len(clip.results) == 300
+    assert np.percentile(lat, 99) <= 0.02 + 1e-9
+    assert any(clip.results[q].missing_models for q in qids)
+
+
+def test_every_query_gets_prediction_and_confidence():
+    rng = np.random.default_rng(1)
+    clip = make_clipper(_models(rng), "exp4", slo=0.05,
+                        latency_models={"good": linear_latency(0.001, 1e-4),
+                                        "bad": linear_latency(0.001, 1e-4)})
+    qids = clip.replay(_trace(rng, 50))
+    for q in qids:
+        p = clip.results[q]
+        assert p.y is not None and 0.0 <= p.confidence <= 1.0
+
+
+def test_feedback_downweights_bad_model():
+    rng = np.random.default_rng(2)
+    clip = make_clipper(_models(rng), "exp4", slo=0.05,
+                        latency_models={"good": linear_latency(0.001, 1e-4),
+                                        "bad": linear_latency(0.001, 1e-4)})
+    xs = [rng.normal(size=(4,)).astype(np.float32) for _ in range(150)]
+    qids = clip.replay([(i * 0.002, x, 0) for i, x in enumerate(xs)])
+    for q, x in zip(qids, xs):
+        clip.feedback(Feedback(q, x, int(np.abs(x).sum()) % 3))
+    w = np.asarray(exp4_weights(clip.policy_state))
+    ids = sorted(_models(rng))                 # ['bad', 'good']
+    assert w[ids.index("good")] > 0.9
+
+
+def test_feedback_join_uses_cache():
+    rng = np.random.default_rng(3)
+    clip = make_clipper(_models(rng), "exp4", slo=0.05,
+                        latency_models={"good": linear_latency(0.001, 1e-4),
+                                        "bad": linear_latency(0.001, 1e-4)})
+    xs = [rng.normal(size=(4,)).astype(np.float32) for _ in range(30)]
+    qids = clip.replay([(i * 0.002, x, 0) for i, x in enumerate(xs)])
+    for q, x in zip(qids, xs):
+        clip.feedback(Feedback(q, x, 0))
+    assert clip.feedback_cache_hit_rate == 1.0   # §4.2: join hits the cache
+
+
+def test_cache_serves_repeated_queries_fast():
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(4,)).astype(np.float32)
+    clip = make_clipper(_models(rng), "exp4", slo=0.05,
+                        latency_models={"good": linear_latency(0.005, 1e-4),
+                                        "bad": linear_latency(0.005, 1e-4)})
+    qids = clip.replay([(i * 0.001, x, 0) for i in range(20)])
+    lat = [clip.results[q].latency for q in qids]
+    # after the first evaluation, identical queries resolve from cache
+    assert min(lat[5:]) < 1e-6
+
+
+def test_exp3_single_model_per_query():
+    rng = np.random.default_rng(5)
+    clip = make_clipper(_models(rng), "exp3", slo=0.05,
+                        latency_models={"good": linear_latency(0.001, 1e-4),
+                                        "bad": linear_latency(0.001, 1e-4)})
+    qids = clip.replay(_trace(rng, 40))
+    for q in qids:
+        assert len(clip.results[q].model_ids) == 1

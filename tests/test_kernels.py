@@ -1,0 +1,121 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
+executed in interpret mode (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm_op
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 2, 2, 128, 64),      # MHA
+    (2, 4, 2, 256, 64),      # GQA
+    (1, 8, 1, 128, 128),     # MQA, MXU-aligned head dim
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, dtype, causal, window):
+    q = jnp.asarray(RNG.normal(size=(B, S, Hq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), dtype)
+    out = flash_attention_op(q, k, v, causal=causal, window=window,
+                             q_blk=64, k_blk=64, interpret=True)
+    ref = flash_attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                              jnp.swapaxes(v, 1, 2), causal=causal,
+                              window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(jnp.swapaxes(ref, 1, 2), np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,Smax,D", [
+    (2, 4, 4, 256, 64),
+    (3, 8, 2, 512, 64),
+    (1, 16, 1, 256, 128),
+])
+@pytest.mark.parametrize("window", [0, 128])
+def test_decode_attention_sweep(B, Hq, Hkv, Smax, D, dtype, window):
+    q = jnp.asarray(RNG.normal(size=(B, 1, Hq, D)), dtype)
+    kc = jnp.asarray(RNG.normal(size=(B, Smax, Hkv, D)), dtype)
+    vc = jnp.asarray(RNG.normal(size=(B, Smax, Hkv, D)), dtype)
+    lengths = jnp.asarray(RNG.integers(1, Smax + 1, size=(B,)), jnp.int32)
+    out = decode_attention_op(q, kc, vc, lengths, window=window,
+                              k_blk=128, interpret=True)
+    ref = decode_attention_ref(q[:, 0], jnp.swapaxes(kc, 1, 2),
+                               jnp.swapaxes(vc, 1, 2), lengths,
+                               window=window)[:, None]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 64), (4, 7, 96), (2, 3, 5, 128)])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    w = jnp.asarray(RNG.normal(size=shape[-1:]), dtype)
+    out = rmsnorm_op(x, w, interpret=True)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,dk,dv,chunk", [
+    (2, 3, 64, 16, 8, 16),      # mLSTM-like (dk == dv after aug)
+    (1, 4, 128, 16, 64, 32),    # SSD-like (small state dim, big head dim)
+    (2, 2, 32, 8, 8, 32),       # single chunk
+])
+def test_ssd_scan_sweep(B, H, S, dk, dv, chunk, dtype):
+    from repro.kernels.ssd_scan.ops import ssd_scan_op
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    q = jnp.asarray(RNG.normal(size=(B, S, H, dk)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, H, dk)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, H, dv)), dtype)
+    lf = jnp.asarray(-np.abs(RNG.normal(size=(B, S, H))), jnp.float32)
+    li = jnp.asarray(-np.abs(RNG.normal(size=(B, S, H))), jnp.float32)
+    y, st = ssd_scan_op(q, k, v, lf, li, chunk=chunk, interpret=True)
+    yr, sr = ssd_scan_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                          jnp.swapaxes(v, 1, 2), jnp.swapaxes(lf, 1, 2),
+                          jnp.swapaxes(li, 1, 2), chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(jnp.swapaxes(yr, 1, 2), np.float32),
+                               **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_kernel_matches_model_attention_paths():
+    """The kernels agree with the model-internal jnp attention (the exact
+    functions the compiled steps use)."""
+    from repro.models.common import attention_decode, attention_prefill
+    q = jnp.asarray(RNG.normal(size=(2, 128, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 128, 2, 64)), jnp.float32)
+    a = attention_prefill(q, k, v, causal=True, q_block=64, k_block=64)
+    b = flash_attention_op(q, k, v, causal=True, q_blk=64, k_blk=64,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+    lengths = jnp.asarray([50, 128], jnp.int32)
+    qd = q[:, :1]
+    c = attention_decode(qd, k, v, lengths)
+    d = decode_attention_op(qd, k, v, lengths, k_blk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(d), atol=2e-5,
+                               rtol=2e-5)

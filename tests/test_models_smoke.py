@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced same-family configs run one
+forward/train step on CPU, assert output shapes + no NaNs (assignment
+requirement), plus prefill/decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeSpec, applicable_shapes
+from repro.configs.registry import ARCHITECTURES, reduced_config
+from repro.distributed.sharding import train_rules
+from repro.launch.inputs import (make_concrete, prefill_batch_specs,
+                                 train_batch_specs)
+from repro.models.api import build_model
+
+SHAPE = ShapeSpec("smoke", 32, 2, "train")
+ALL_ARCHS = sorted(ARCHITECTURES)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _build(name, mesh):
+    cfg = reduced_config(ARCHITECTURES[name])
+    rules = train_rules(False)
+    model = build_model(cfg, mesh, rules)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step_shapes_and_finite(name, mesh):
+    cfg, model, params = _build(name, mesh)
+    batch = make_concrete(train_batch_specs(cfg, SHAPE), vocab=cfg.vocab_size)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss_fn))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{name} loss not finite"
+    gnorm = sum(jnp.sum(jnp.abs(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm), f"{name} grads not finite"
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_finite_and_shaped(name, mesh):
+    cfg, model, params = _build(name, mesh)
+    pb = make_concrete(prefill_batch_specs(cfg, SHAPE), vocab=cfg.vocab_size)
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, max_len=64)
+                            )(params, pb)
+    V = cfg.padded(1).vocab_size
+    assert logits.shape == (2, V)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all()
+    toks = jnp.zeros((2, 1), jnp.int32)
+    logits2, cache2 = jax.jit(model.decode_step)(params, cache, toks,
+                                                 cache["lengths"])
+    assert logits2.shape == (2, V)
+    assert jnp.isfinite(logits2.astype(jnp.float32)).all()
+    assert int(cache2["lengths"][0]) == int(cache["lengths"][0]) + 1
+
+
+@pytest.mark.parametrize("name", ["granite-8b", "qwen2-7b", "hymba-1.5b",
+                                  "xlstm-125m", "seamless-m4t-medium",
+                                  "internvl2-1b"])
+def test_decode_matches_prefill(name, mesh):
+    """Teacher-forced decode of token S must match prefill of S+1 tokens."""
+    cfg, model, params = _build(name, mesh)
+    rng = np.random.default_rng(0)
+    S = 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S + 1)), jnp.int32)
+    full = {"tokens": toks}
+    pre = {"tokens": toks[:, :S]}
+    if cfg.frontend == "vision":
+        emb = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)) * 0.02,
+                          jnp.float32)
+        full["prefix_embeddings"] = emb
+        pre["prefix_embeddings"] = emb
+    if cfg.is_encoder_decoder:
+        fr = jnp.asarray(rng.normal(size=(2, 32, cfg.d_model)) * 0.02,
+                         jnp.float32)
+        full["frames"] = fr
+        pre["frames"] = fr
+    # cache capacity must cover prefix embeddings + text + 1 appended token
+    cap = S + 1 + (8 if cfg.frontend == "vision" else 0)
+    lg_full, _ = model.prefill(params, full, max_len=cap)
+    _, cache = model.prefill(params, pre, max_len=cap)
+    lg_dec, _ = model.decode_step(params, cache, toks[:, S:S + 1],
+                                  cache["lengths"])
+    err = float(jnp.max(jnp.abs(lg_full.astype(jnp.float32)
+                                - lg_dec.astype(jnp.float32))))
+    assert err < 0.1, f"{name}: prefill/decode divergence {err}"
+
+
+def test_long_500k_applicability_rule():
+    names = {c.name for c, s in
+             ((ARCHITECTURES[n], None) for n in ARCHITECTURES)
+             if not ARCHITECTURES[c.name].is_full_attention}
+    long_archs = {c.name for n, c in ARCHITECTURES.items()
+                  if any(s.name == "long_500k" for s in applicable_shapes(c))}
+    assert long_archs == {"xlstm-125m", "hymba-1.5b"}
+
+
+def test_param_counts_match_published_scale():
+    """Logical parameter counts are in the right ballpark for the names."""
+    expect = {
+        "dbrx-132b": (110e9, 150e9),
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "granite-8b": (6e9, 10e9),
+        "qwen2-7b": (6e9, 9e9),
+        "smollm-360m": (0.3e9, 0.5e9),
+        "minitron-8b": (7e9, 10e9),
+        "internvl2-1b": (0.4e9, 1.2e9),
+        "xlstm-125m": (0.1e9, 0.2e9),
+        "hymba-1.5b": (1.2e9, 2.2e9),
+        "seamless-m4t-medium": (0.5e9, 1.5e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = ARCHITECTURES[name].param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B"
+
+
+def test_moe_active_params():
+    kimi = ARCHITECTURES["kimi-k2-1t-a32b"]
+    active = kimi.active_param_count()
+    assert 25e9 <= active <= 45e9           # "a32b"

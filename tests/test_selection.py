@@ -1,0 +1,93 @@
+"""Model selection layer: Exp3 / Exp4 (paper §5.1-5.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (Exp3Policy, Exp4Policy, exp3_init,
+                                  exp3_observe, exp3_probs, exp4_combine,
+                                  exp4_init, exp4_observe, exp4_weights)
+
+
+def test_exp3_converges_to_best_model():
+    rng = np.random.default_rng(0)
+    err = np.array([0.5, 0.1, 0.4])           # model 1 is best
+    s = exp3_init(3)
+    for _ in range(2000):
+        p = np.asarray(exp3_probs(s))
+        i = rng.choice(3, p=p / p.sum())
+        loss = float(rng.random() < err[i])
+        s = exp3_observe(s, jnp.int32(i), jnp.float32(loss), eta=0.1)
+    assert int(np.argmax(np.asarray(exp3_probs(s)))) == 1
+    assert float(exp3_probs(s)[1]) > 0.6
+
+
+def test_exp4_downweights_failing_model():
+    """Paper Fig 8: a degraded model loses its ensemble weight."""
+    s = exp4_init(2)
+    for _ in range(300):
+        s = exp4_observe(s, jnp.asarray([0.9, 0.05]), eta=0.1)
+    w = np.asarray(exp4_weights(s))
+    assert w[1] > 0.95
+
+
+def test_exp4_recovers_after_model_heals():
+    """Recovery is gradual (paper Fig 8): the weight gap accumulated during
+    the failure window must be won back at the healthy loss differential."""
+    s = exp4_init(2)
+    for _ in range(200):                       # model 0 degraded
+        s = exp4_observe(s, jnp.asarray([0.9, 0.2]), eta=0.1)
+    assert np.asarray(exp4_weights(s))[0] < 0.1
+    for _ in range(1500):                      # model 0 recovers, now best
+        s = exp4_observe(s, jnp.asarray([0.05, 0.2]), eta=0.1)
+    assert np.asarray(exp4_weights(s))[0] > 0.6
+
+
+def test_exp4_combine_confidence_agreement():
+    s = exp4_init(3)
+    agree = jnp.asarray([[0.1, 0.9], [0.2, 0.8], [0.3, 0.7]])
+    y, conf = exp4_combine(s, agree)
+    assert int(jnp.argmax(y)) == 1 and conf == 1.0
+    split = jnp.asarray([[0.9, 0.1], [0.2, 0.8], [0.3, 0.7]])
+    y2, conf2 = exp4_combine(s, split)
+    assert conf2 < 1.0
+
+
+def test_exp4_combine_masked_straggler():
+    """§5.2.2: missing models are excluded from weights and confidence."""
+    s = exp4_init(3)
+    preds = jnp.asarray([[0.9, 0.1], [0.0, 0.0], [0.8, 0.2]])
+    avail = jnp.asarray([True, False, True])
+    y, conf = exp4_combine(s, preds, avail)
+    assert int(jnp.argmax(y)) == 0
+    assert conf == 1.0                        # both available models agree
+
+
+@given(st.integers(2, 8), st.lists(st.floats(0.0, 1.0), min_size=2,
+                                   max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_exp_weights_remain_simplex(k, losses):
+    losses = (losses + [0.0] * k)[:k]
+    s = exp4_init(k)
+    for _ in range(5):
+        s = exp4_observe(s, jnp.asarray(losses, jnp.float32))
+    w = np.asarray(exp4_weights(s))
+    assert np.all(w >= 0) and abs(w.sum() - 1.0) < 1e-5
+    p = np.asarray(exp3_probs(exp3_observe(exp3_init(k), jnp.int32(0),
+                                           jnp.float32(losses[0]))))
+    assert np.all(p >= 0) and abs(p.sum() - 1.0) < 1e-5
+
+
+def test_policy_objects_listing2_interface():
+    rng = np.random.default_rng(0)
+    p3 = Exp3Policy(["a", "b"])
+    s = p3.init()
+    chosen = p3.select(s, None, rng)
+    assert len(chosen) == 1 and chosen[0] in ("a", "b")
+    p4 = Exp4Policy(["a", "b"])
+    s4 = p4.init()
+    assert p4.select(s4, None, rng) == ["a", "b"]
+    y, conf = p4.combine(s4, None, {"a": np.array([1.0, 0.0]),
+                                    "b": np.array([0.8, 0.2])})
+    assert int(np.argmax(y)) == 0 and 0 < conf <= 1.0

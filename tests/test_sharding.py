@@ -1,0 +1,81 @@
+"""Sharding rules, spec construction, batch-divisibility fitting."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.registry import ARCHITECTURES
+from repro.distributed.sharding import (ShardingContext, serve_rules,
+                                        strip_pod, train_rules)
+from repro.launch.steps import fit_batch_sharding
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_spec_dedupes_repeated_mesh_axes(mesh22):
+    rules = {"expert": "model", "fsdp": "data", "expert_ffn": "data"}
+    ctx = ShardingContext(mesh22, rules)
+    # fsdp and expert_ffn both map to data: second occurrence dropped
+    spec = ctx.spec(("expert", "fsdp", "expert_ffn"))
+    assert spec == P("model", "data")
+
+
+def test_spec_trailing_nones_trimmed(mesh22):
+    ctx = ShardingContext(mesh22, train_rules(False))
+    assert ctx.spec(("batch", None, None)) == P(("data",))
+
+
+def test_strip_pod():
+    r = train_rules(True)
+    assert r["batch"] == ("pod", "data")
+    s = strip_pod(r)
+    assert s["batch"] == ("data",)
+    assert s["users"] == ("data",)
+
+
+def test_serve_rules_replicate_fsdp():
+    assert serve_rules(False)["fsdp"] is None
+    assert train_rules(False)["fsdp"] == "data"
+    assert serve_rules(False, shard_experts_2d=True)["expert_ffn"] == "data"
+
+
+def test_fit_batch_sharding_drops_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = dict(train_rules(False))
+    # batch of 1 cannot shard over data=1? it can (1 % 1 == 0)
+    out = fit_batch_sharding(rules, mesh, 1)
+    assert out["batch"] == ("data",)
+
+
+def test_padding_rules_all_archs():
+    """Every arch's padded dims divide cleanly by tp=16 (the dry-run mesh)."""
+    for name, cfg in ARCHITECTURES.items():
+        pd = cfg.padded(16)
+        assert pd.num_q_heads % 16 == 0 or pd.num_q_heads % pd.num_kv_heads == 0
+        assert pd.num_q_heads % pd.num_kv_heads == 0, name
+        assert pd.vocab_size % 16 == 0, name
+        assert pd.num_kv_heads % 16 == 0 or 16 % pd.num_kv_heads == 0, name
+        assert pd.num_q_heads >= cfg.num_heads
+        assert pd.vocab_size >= cfg.vocab_size
+
+
+def test_padded_tp1_is_logical():
+    for cfg in ARCHITECTURES.values():
+        pd = cfg.padded(1)
+        assert pd.num_q_heads == cfg.num_heads
+        assert pd.num_kv_heads == cfg.num_kv_heads
+
+
+def test_cell_accounting():
+    """40 nominal cells; 8 long_500k skipped for full-attention archs."""
+    from repro.configs.registry import all_cells
+    cells = list(all_cells())
+    assert len(cells) == 32
+    long_archs = {c.name for c, s in cells if s.name == "long_500k"}
+    assert long_archs == {"xlstm-125m", "hymba-1.5b"}

@@ -1,0 +1,36 @@
+"""Straggler mitigation math (paper §5.2.2)."""
+
+import numpy as np
+import pytest
+
+from repro.core.straggler import (DeadlineTracker, agreement_confidence,
+                                  assemble_preds)
+
+
+def test_assemble_mean_substitution():
+    preds = {"a": np.array([1.0, 0.0]), "c": np.array([0.0, 1.0])}
+    mat, avail = assemble_preds(["a", "b", "c"], preds)
+    assert list(avail) == [True, False, True]
+    np.testing.assert_allclose(np.asarray(mat[1]), [0.5, 0.5])
+
+
+def test_assemble_all_missing_raises():
+    with pytest.raises(ValueError):
+        assemble_preds(["a"], {})
+
+
+def test_agreement_confidence():
+    import jax.numpy as jnp
+    mat = jnp.asarray([[0.9, 0.1], [0.8, 0.2], [0.1, 0.9]])
+    avail = jnp.asarray([True, True, True])
+    assert abs(agreement_confidence(mat, avail) - 2 / 3) < 1e-6
+    avail2 = jnp.asarray([True, True, False])
+    assert agreement_confidence(mat, avail2) == 1.0
+
+
+def test_deadline_tracker():
+    d = DeadlineTracker(0.02)
+    assert d.deadline_for(1.0) == 1.02
+    assert not d.expired(1.0, 1.01)
+    assert d.expired(1.0, 1.03)
+    assert abs(d.remaining(1.0, 1.005) - 0.015) < 1e-9

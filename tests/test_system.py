@@ -1,0 +1,136 @@
+"""End-to-end system behaviour: the paper's headline claims reproduced in
+miniature (details in benchmarks/, these are the fast regression versions)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (Feedback, linear_latency, make_clipper)
+from repro.core.selection import exp4_weights
+
+
+def _make_task(rng, k_classes=3, d=6):
+    W = rng.normal(size=(d, k_classes))
+
+    def label(x):
+        return int(np.argmax(x @ W))
+
+    return W, label
+
+
+def _trained_models(rng, W, noise_levels):
+    """Linear models of varying quality on the synthetic task."""
+    models = {}
+    for i, nz in enumerate(noise_levels):
+        Wn = W + rng.normal(size=W.shape) * nz
+
+        def fn(x, Wn=Wn):
+            z = x @ Wn
+            e = np.exp(z - z.max(axis=1, keepdims=True))
+            return e / e.sum(axis=1, keepdims=True)
+
+        models[f"m{i}"] = fn
+    return models
+
+
+def test_adaptive_batching_increases_throughput():
+    """Paper §4.3 headline: batching provides large throughput gains under a
+    latency SLO vs no batching."""
+    rng = np.random.default_rng(0)
+    lat = linear_latency(0.004, 0.00005)     # high fixed cost, cheap per item
+    def fn(x):
+        return np.zeros((len(x), 3))
+
+    def run(aimd_kwargs, n=400, gap=0.0002):
+        clip = make_clipper({"m": fn}, "exp4", slo=0.02,
+                            latency_models={"m": lat},
+                            aimd_kwargs=aimd_kwargs)
+        trace = [(i * gap, rng.normal(size=(4,)).astype(np.float32), 0)
+                 for i in range(n)]
+        qids = clip.replay(trace)
+        done = clip.now - trace[0][0]
+        return n / done
+
+    thr_batched = run({})
+    thr_unbatched = run({"max_batch": 1})
+    assert thr_batched > 3 * thr_unbatched
+
+
+def test_ensemble_beats_single_model_accuracy():
+    """Paper §5.2: the ensemble reduces error vs individual models."""
+    rng = np.random.default_rng(1)
+    W, label = _make_task(rng)
+    models = _trained_models(rng, W, [0.6, 0.7, 0.8, 0.9, 1.0])
+    xs = rng.normal(size=(400, 6)).astype(np.float32)
+    singles = []
+    for mid, fn in models.items():
+        singles.append(np.mean([np.argmax(fn(x[None])[0]) == label(x)
+                                for x in xs]))
+    ens = np.mean([np.argmax(np.mean([fn(x[None])[0]
+                                      for fn in models.values()], axis=0))
+                   == label(x) for x in xs])
+    assert ens >= max(singles) - 0.02        # at least on par with the best
+
+
+def test_model_failure_recovery_end_to_end():
+    """Paper Fig 8 in miniature: Exp4 routes around a degraded model."""
+    rng = np.random.default_rng(2)
+    W, label = _make_task(rng)
+    models = _trained_models(rng, W, [0.1, 0.8])
+    state = {"broken": False}
+    base = models["m0"]
+
+    def flaky(x):
+        if state["broken"]:
+            return rng.normal(size=(len(x), 3))
+        return base(x)
+
+    models["m0"] = flaky
+    clip = make_clipper(models, "exp4", slo=0.05,
+                        latency_models={m: linear_latency(0.0005, 1e-5)
+                                        for m in models})
+    t = 0.0
+
+    def interact(n):
+        nonlocal t
+        errs = []
+        for _ in range(n):
+            x = rng.normal(size=(6,)).astype(np.float32)
+            clip.run(until=t)
+            qid = clip.submit(x, arrival_time=t)
+            t += 0.002
+            clip.run()
+            y = clip.results[qid].y
+            errs.append(int(np.argmax(y) != label(x)))
+            clip.feedback(Feedback(qid, x, label(x)))
+        return np.mean(errs)
+
+    e_before = interact(150)
+    w_before = np.asarray(exp4_weights(clip.policy_state))
+    state["broken"] = True
+    interact(200)                             # adaptation window
+    w_after = np.asarray(exp4_weights(clip.policy_state))
+    e_after = interact(100)
+    # weight on m0 collapsed after failure
+    assert w_after[0] < w_before[0] * 0.5
+    # error rate recovered to near the healthy backup's level
+    assert e_after < 0.65
+
+
+def test_confidence_thresholding_reduces_error():
+    """Paper §5.2.1: accepting only high-agreement predictions cuts error."""
+    rng = np.random.default_rng(3)
+    W, label = _make_task(rng)
+    models = _trained_models(rng, W, [0.5, 0.6, 0.7, 0.8, 0.9])
+    clip = make_clipper(models, "exp4", slo=0.05,
+                        latency_models={m: linear_latency(0.0005, 1e-5)
+                                        for m in models})
+    xs = [rng.normal(size=(6,)).astype(np.float32) for _ in range(300)]
+    qids = clip.replay([(i * 0.002, x, 0) for i, x in enumerate(xs)])
+    rows = [(clip.results[q].confidence,
+             int(np.argmax(clip.results[q].y) != label(x)))
+            for q, x in zip(qids, xs)]
+    all_err = np.mean([e for _, e in rows])
+    confident = [e for c, e in rows if c >= 0.99]
+    assert len(confident) > 10
+    assert np.mean(confident) < all_err
