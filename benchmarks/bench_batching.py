@@ -7,9 +7,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (D_FEAT, fit_linear_latency, make_containers,
-                               np_call, time_batch)
+from benchmarks.common import (D_FEAT, fit_linear_latency, latency_ms,
+                               make_containers, model_capacity, np_call,
+                               time_batch)
 from repro.core import linear_latency, make_clipper
+from repro.workloads import poisson_trace, query_trace
 
 SLO = 0.020
 
@@ -34,7 +36,10 @@ def bench_latency_profiles(rng) -> list:
 
 
 def _throughput(kind: str, base: float, per_item: float, rng, *,
-                n=3000, gap=0.0002, batch_delay=0.0, aimd_kwargs=None) -> float:
+                n=3000, rate=5000.0, batch_delay=0.0,
+                aimd_kwargs=None) -> "tuple[float, float]":
+    """Open-loop Poisson load through the frontend; throughput and P99 come
+    from the shared telemetry report instead of a private timing loop."""
     def fn(x):
         return np.zeros((len(x), 10), np.float32)
 
@@ -46,12 +51,11 @@ def _throughput(kind: str, base: float, per_item: float, rng, *,
         from repro.core.batching import BatchQueue, QuantileRegressionController
         rs = clip.replica_sets["m"]
         rs.queues = [BatchQueue(QuantileRegressionController(SLO), batch_delay)]
-    trace = [(i * gap, rng.normal(size=(D_FEAT,)).astype(np.float32), 0)
-             for i in range(n)]
-    qids = clip.replay(trace)
-    lat = [clip.results[q].latency for q in qids]
-    span = clip.now - trace[0][0]
-    return n / span, float(np.percentile(lat, 99))
+        rs.attach_metrics(clip.metrics)
+    times = poisson_trace(rate, n / rate, seed=0)
+    clip.replay(query_trace(times, seed=1, d_feat=D_FEAT, pool=0))
+    rep = clip.report()
+    return rep["throughput_qps"], rep["latency_s"]["p99"]
 
 
 def bench_dynamic_batching(rng) -> list:
@@ -110,16 +114,15 @@ def bench_delayed_batching(rng) -> list:
                      rng.normal(size=(4,)).astype(np.float32), 0)
                     for j in range(8))
                 t += 0.010
-            qids = clip.replay(trace)
-            stats = clip.replica_sets["m"].replicas[0].stats
-            caps[delay] = stats.queries / stats.busy_time
-            p99 = np.percentile([clip.results[q].latency for q in qids], 99)
+            clip.replay(trace)
+            rep = clip.report()
+            caps[delay] = model_capacity(rep, "m")
             rows.append({
                 "name": f"fig5_delayed/{name}/delay_{delay*1e3:.0f}ms",
-                "us_per_call": 1e6 * stats.busy_time / stats.queries,
+                "us_per_call": 1e6 / caps[delay] if caps[delay] else 0.0,
                 "derived": (f"capacity_qps={caps[delay]:.0f};"
-                            f"mean_batch={stats.queries/stats.batches:.1f};"
-                            f"p99_ms={p99*1e3:.1f}")})
+                            f"mean_batch={rep['batch_size']['mean']:.1f};"
+                            f"p99_ms={latency_ms(rep):.1f}")})
         rows.append({"name": f"fig5_delayed/{name}/efficiency_gain",
                      "us_per_call": 0.0,
                      "derived": f"x{caps[0.002]/caps[0.0]:.2f}"})

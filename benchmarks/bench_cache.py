@@ -11,6 +11,7 @@ import numpy as np
 
 from benchmarks.common import D_FEAT, make_containers, np_call
 from repro.core import Feedback, make_clipper
+from repro.workloads import poisson_trace, query_trace
 
 
 def _feedback_throughput(use_cache: bool, rng, n=300):
@@ -19,13 +20,14 @@ def _feedback_throughput(use_cache: bool, rng, n=300):
                                            "kernel_svm")}
     clip = make_clipper(models, "exp4", slo=0.5, cache_size=4096,
                         use_cache=use_cache)
-    xs = [rng.normal(size=(D_FEAT,)).astype(np.float32) for _ in range(n)]
-    qids = clip.replay([(i * 1e-4, x, 0) for i, x in enumerate(xs)])
+    times = poisson_trace(10_000.0, n / 10_000.0, seed=11)
+    trace = query_trace(times, seed=12, d_feat=D_FEAT, pool=0)
+    qids = clip.replay(trace)
     t0 = time.perf_counter()
-    for q, x in zip(qids, xs):
+    for q, (_, x, _) in zip(qids, trace):
         clip.feedback(Feedback(q, x, 0))
     dt = time.perf_counter() - t0
-    return n / dt, clip.feedback_cache_hit_rate
+    return len(qids) / dt, clip.feedback_cache_hit_rate
 
 
 def run(rng=None) -> list:

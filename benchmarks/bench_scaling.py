@@ -11,7 +11,9 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks.common import model_capacity
 from repro.core import linear_latency, make_clipper
+from repro.workloads import poisson_trace, query_trace
 
 INPUT_BYTES = 299 * 299 * 3          # paper's ImageNet-scale input
 GBPS = 1e9 / 8
@@ -26,11 +28,9 @@ def _single_replica_capacity(rng, *, n=3000) -> float:
 
     clip = make_clipper({"m": fn}, "exp4", slo=0.05, use_cache=False,
                         latency_models={"m": linear_latency(base, per_item)})
-    trace = [(i * 1e-4, rng.normal(size=(4,)).astype(np.float32), 0)
-             for i in range(n)]   # overload: measures capacity
-    clip.replay(trace)
-    stats = clip.replica_sets["m"].replicas[0].stats
-    return stats.queries / stats.busy_time
+    times = poisson_trace(10_000.0, n / 10_000.0, seed=0)  # overload
+    clip.replay(query_trace(times, seed=1, d_feat=4, pool=0))
+    return model_capacity(clip.report(), "m")
 
 
 def run(rng=None) -> list:

@@ -23,19 +23,19 @@ def _run(ensemble_size: int, rng, *, deadline: bool, n=600):
         lat[f"m{i}"] = linear_latency(0.002, 5e-5, jitter=0.1,
                                       p_straggle=0.03, straggle_factor=15,
                                       rng=rng)
-    import numpy as _np
     from benchmarks.common import np_call
     slo = SLO if deadline else 10.0      # no-deadline = block for everyone
     clip = make_clipper({k: np_call(v) for k, v in models.items()},
                         "exp4", slo=slo, latency_models=lat)
     xs = [rng.normal(size=(W.shape[0],)).astype(np.float32) for _ in range(n)]
     qids = clip.replay([(i * 0.004, x, 0) for i, x in enumerate(xs)])
-    lats = np.asarray([clip.results[q].latency for q in qids])
-    missing = np.asarray([len(clip.results[q].missing_models) > 0
-                          for q in qids])
+    # tail latency + straggler accounting from the shared telemetry report
+    rep = clip.report()
+    miss_frac = (rep["stragglers"]["partial_queries"]
+                 / max(rep["queries"]["completed"], 1))
     acc = np.mean([int(np.argmax(clip.results[q].y)) == label(x[None])[0]
                    for q, x in zip(qids, xs)])
-    return (float(np.percentile(lats, 99)), float(missing.mean()), float(acc))
+    return (rep["latency_s"]["p99"], float(miss_frac), float(acc))
 
 
 def run(rng=None) -> list:

@@ -4,7 +4,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,5 +121,22 @@ def train_linear_model(rng, W_true, *, noise: float, n_train: int = 2000,
     return predict
 
 
-def percentile(xs: List[float], p: float) -> float:
-    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
+# ---------------------------------------------------------------------------
+# telemetry adapters: benches consume the shared repro.metrics/v1 reports
+# (core/metrics.py) instead of private timing loops
+# ---------------------------------------------------------------------------
+
+def model_busy_time(report: dict, model_id: str) -> float:
+    """Total service seconds a model spent evaluating batches (the
+    histogram's exactly-tracked sum)."""
+    s = report["per_model"][model_id]["service_s"]
+    return s["sum"] if s["count"] else 0.0
+
+def model_capacity(report: dict, model_id: str) -> float:
+    """Queries per busy-second — the container's efficiency under the
+    observed batching (Fig 5's capacity metric)."""
+    busy = model_busy_time(report, model_id)
+    return report["per_model"][model_id]["queries"] / busy if busy else 0.0
+
+def latency_ms(report: dict, p: str = "p99") -> float:
+    return report["latency_s"][p] * 1e3

@@ -66,6 +66,13 @@ def main():
     print("done — the ensemble absorbed a model failure with no operator "
           "action (paper Fig 8).")
 
+    rep = clip.report()
+    print(f"telemetry: served={rep['queries']['completed']} "
+          f"p99={rep['latency_s']['p99']*1e3:.1f}ms "
+          f"slo_violations={rep['slo']['violations']} "
+          f"cache_hit_rate={rep['cache']['hit_rate']:.2f} "
+          f"stragglers={rep['stragglers']['partial_queries']}")
+
 
 if __name__ == "__main__":
     main()

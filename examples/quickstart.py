@@ -54,6 +54,15 @@ def main():
     r = server.completed[rids[0]]
     print(f"sample generation (request 0): {r.tokens[:12]}...")
 
+    # shared telemetry schema (core/metrics.py) — same fields the Clipper
+    # frontend and `python -m repro.workloads.run` report
+    rep = server.report()
+    lat, bs = rep["latency_s"], rep["batch_size"]
+    print(f"telemetry: p50={lat['p50']*1e3:.0f}ms p99={lat['p99']*1e3:.0f}ms "
+          f"throughput={rep['throughput_qps']:.1f} req/s "
+          f"slo_violation_rate={rep['slo']['rate']:.2f} "
+          f"mean_batch={bs['mean']:.1f}")
+
 
 if __name__ == "__main__":
     main()

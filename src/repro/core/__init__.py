@@ -14,6 +14,7 @@ from repro.core.containers import (JaxModelContainer, ReplicaSet,
 from repro.core.context import ContextualStore
 from repro.core.frontend import Clipper, make_clipper
 from repro.core.interfaces import Feedback, Prediction, Query
+from repro.core.metrics import MetricsRegistry, StreamingHistogram, VirtualClock
 from repro.core.selection import (Exp3Policy, Exp4Policy, exp3_init,
                                   exp3_observe, exp3_probs, exp4_combine,
                                   exp4_init, exp4_observe, exp4_weights)
@@ -27,4 +28,5 @@ __all__ = [
     "Exp3Policy", "Exp4Policy", "exp3_init", "exp3_observe", "exp3_probs",
     "exp4_combine", "exp4_init", "exp4_observe", "exp4_weights",
     "DeadlineTracker", "assemble_preds",
+    "MetricsRegistry", "StreamingHistogram", "VirtualClock",
 ]

@@ -21,6 +21,7 @@ from typing import Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import metrics as M
 from repro.core.interfaces import Query
 
 
@@ -146,11 +147,17 @@ class BatchQueue:
     """Adaptive batching queue for one model container (paper §4.3).
 
     ``batch_delay``: under moderate load, hold dispatch up to this long after
-    the oldest enqueued query so more queries can join (paper §4.3.2)."""
+    the oldest enqueued query so more queries can join (paper §4.3.2).
+
+    ``metrics`` / ``model_id``: when attached (frontend does this at
+    construction), every dispatch reports queue depth, batch size, and
+    per-model service time through the shared telemetry schema."""
 
     controller: AIMDController
     batch_delay: float = 0.0
     _q: Deque[Query] = field(default_factory=deque)
+    metrics: Optional[object] = None
+    model_id: Optional[str] = None
 
     def put(self, query: Query) -> None:
         self._q.append(query)
@@ -170,8 +177,25 @@ class BatchQueue:
 
     def next_batch(self, now: float) -> List[Query]:
         """Dequeue up to the controller's current max batch size."""
-        n = min(len(self._q), self.controller.max_batch_size)
-        return [self._q.popleft() for _ in range(n)]
+        depth = len(self._q)
+        n = min(depth, self.controller.max_batch_size)
+        batch = [self._q.popleft() for _ in range(n)]
+        if self.metrics is not None and batch:
+            self.metrics.observe(M.QUEUE_DEPTH, depth)
+            if self.model_id is not None:
+                self.metrics.observe_both(M.BATCH_SIZE, n, model=self.model_id)
+                self.metrics.inc_both(M.BATCHES, model=self.model_id)
+                self.metrics.inc(M.QUERIES_SUBMITTED, n, model=self.model_id)
+            else:
+                self.metrics.observe(M.BATCH_SIZE, n)
+                self.metrics.inc(M.BATCHES)
+        return batch
 
     def record(self, batch_size: int, latency: float) -> None:
         self.controller.record(batch_size, latency)
+        if self.metrics is not None:
+            if self.model_id is not None:
+                self.metrics.observe_both(M.SERVICE, latency,
+                                          model=self.model_id)
+            else:
+                self.metrics.observe(M.SERVICE, latency)

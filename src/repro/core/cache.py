@@ -18,6 +18,8 @@ from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import metrics as M
+
 
 def digest(x: Any) -> Hashable:
     """Stable digest of a query input (arrays hashed by content)."""
@@ -116,16 +118,24 @@ class ClockCache:
 
 
 class PredictionCache:
-    """(model_id, digest(x)) -> prediction, on top of ClockCache."""
+    """(model_id, digest(x)) -> prediction, on top of ClockCache.
 
-    def __init__(self, capacity: int):
+    When a ``MetricsRegistry`` is attached, every ``request`` is reported as
+    a ``cache.hits`` / ``cache.misses`` increment — the shared telemetry
+    schema (metrics.py) both serving stacks emit."""
+
+    def __init__(self, capacity: int, metrics=None):
         self.cache = ClockCache(capacity)
+        self.metrics = metrics
 
     def key(self, model_id: str, x: Any) -> Hashable:
         return (model_id, digest(x))
 
     def request(self, model_id: str, x: Any) -> bool:
-        return self.cache.request(self.key(model_id, x))
+        hit = self.cache.request(self.key(model_id, x))
+        if self.metrics is not None:
+            self.metrics.inc(M.CACHE_HITS if hit else M.CACHE_MISSES)
+        return hit
 
     def fetch(self, model_id: str, x: Any) -> Optional[Any]:
         return self.cache.fetch(self.key(model_id, x))

@@ -107,6 +107,14 @@ class ReplicaSet:
                        for _ in replicas]
         self.free_at = [0.0 for _ in replicas]
 
+    def attach_metrics(self, metrics) -> None:
+        """Point every queue (current or replaced) at a shared registry —
+        call this again after swapping queues so per-model telemetry
+        survives reconstruction."""
+        for queue in self.queues:
+            queue.metrics = metrics
+            queue.model_id = self.model_id
+
     def healthy(self) -> List[int]:
         return [i for i, r in enumerate(self.replicas) if not r.fail]
 

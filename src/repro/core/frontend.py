@@ -26,8 +26,10 @@ from repro.core.batching import AIMDController, BatchQueue
 from repro.core.cache import PredictionCache
 from repro.core.containers import JaxModelContainer, ReplicaSet
 from repro.core.interfaces import Feedback, Prediction, Query
+from repro.core.metrics import (MetricsRegistry, QUERIES_COMPLETED,
+                                QUERIES_SUBMITTED)
 from repro.core.selection import Exp3Policy, Exp4Policy
-from repro.core.straggler import assemble_preds
+from repro.core.straggler import assemble_preds, record_stragglers
 
 
 @dataclass(order=True)
@@ -45,11 +47,18 @@ class Clipper:
                  slo: float = 0.020, cache_size: int = 4096,
                  loss_fn: Optional[Callable[[Any, Any], float]] = None,
                  contextual_store=None, seed: int = 0,
-                 use_cache: bool = True):
+                 use_cache: bool = True,
+                 metrics: Optional[MetricsRegistry] = None):
         self.replica_sets = replica_sets
         self.policy = policy
         self.slo = slo
-        self.cache = PredictionCache(cache_size) if use_cache else None
+        self.metrics = metrics if metrics is not None else MetricsRegistry(slo)
+        self.cache = (PredictionCache(cache_size, metrics=self.metrics)
+                      if use_cache else None)
+        # batching + cache layers report through the same registry, so both
+        # serving stacks emit one telemetry schema (metrics.py)
+        for rs in replica_sets.values():
+            rs.attach_metrics(self.metrics)
         self.loss_fn = loss_fn or _default_loss
         self.contextual = contextual_store
         self.rng = np.random.default_rng(seed)
@@ -71,6 +80,8 @@ class Clipper:
         """Issue a prediction request; returns the query id."""
         at = self.now if arrival_time is None else arrival_time
         self.now = max(self.now, at)
+        self.metrics.inc(QUERIES_SUBMITTED)
+        self.metrics.mark(at)
         qid = next(self._qseq)
         q = Query(qid, x, context_id, at, deadline=at + self.slo)
         chosen = self.policy.select(self._policy_state_for(q), x, self.rng)
@@ -183,9 +194,14 @@ class Clipper:
         y, conf = self.policy.combine(s, q.x, preds)
         missing = tuple(sorted(entry["need"] - set(preds)))
         entry["done"] = True
+        latency = self.now - q.arrival_time
+        self.metrics.mark(self.now)
+        self.metrics.inc(QUERIES_COMPLETED)
+        self.metrics.observe_latency(latency)
+        record_stragglers(self.metrics, missing)
         self.results[q.query_id] = Prediction(
             q.query_id, y, conf, tuple(sorted(preds)),
-            latency=self.now - q.arrival_time,
+            latency=latency,
             missing_models=missing)
 
     # ------------------------------------------------------------------
@@ -230,6 +246,14 @@ class Clipper:
     def feedback_cache_hit_rate(self) -> float:
         tot = self._feedback_hits + self._feedback_misses
         return self._feedback_hits / tot if tot else 0.0
+
+    def report(self) -> Dict[str, Any]:
+        """Canonical telemetry report (metrics.py schema, shared with
+        LMServer)."""
+        return self.metrics.report("frontend")
+
+    def report_json(self, **extra: Any) -> str:
+        return self.metrics.report_json("frontend", **extra)
 
 
 def _default_loss(y, y_true) -> float:

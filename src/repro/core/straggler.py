@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import metrics as M
+
 
 def assemble_preds(model_ids: Sequence[str], preds: Dict[str, Any]
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -40,6 +42,16 @@ def agreement_confidence(preds_matrix: jnp.ndarray,
         jnp.mean(jnp.where(available[:, None], preds_matrix, 0.0), axis=0))
     agree = (votes == combined) & available
     return float(agree.sum() / jnp.maximum(available.sum(), 1))
+
+
+def record_stragglers(metrics, missing_models: Sequence[str]) -> None:
+    """Single accounting convention for straggler mitigation, shared by both
+    serving stacks: one ``straggler.partial_queries`` per degraded query,
+    ``straggler.dropped_models`` per missing ensemble member."""
+    if metrics is None or not missing_models:
+        return
+    metrics.inc(M.STRAGGLER_PARTIAL)
+    metrics.inc(M.STRAGGLER_DROPPED, len(missing_models))
 
 
 class DeadlineTracker:

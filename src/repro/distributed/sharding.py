@@ -35,10 +35,13 @@ class ShardingContext:
             m = self.rules.get(ax) if ax else None
             # a mesh axis may appear at most once in a PartitionSpec
             if m is not None:
+                was_tuple = not isinstance(m, str)
                 flat = (m,) if isinstance(m, str) else tuple(m)
                 flat = tuple(a for a in flat if a not in used and a in self.mesh.axis_names)
                 used.update(flat)
-                m = flat if len(flat) > 1 else (flat[0] if flat else None)
+                # keep tuple rules as tuples: P(('data',)) != P('data') on
+                # older JAX, and rules like batch=('data',) are tuples
+                m = (flat or None) if was_tuple else (flat[0] if flat else None)
             out.append(m)
         while out and out[-1] is None:
             out.pop()
@@ -104,6 +107,44 @@ def strip_pod(rules: Dict[str, AxisVal]) -> Dict[str, AxisVal]:
         elif v == "pod":
             out[k] = None
     return out
+
+
+def _shard_map_check_kwarg() -> Optional[str]:
+    """The replication-check kwarg jax.shard_map accepts (renamed
+    check_rep -> check_vma mid-series), or None when only the experimental
+    API exists (0.4.x). Probed once via the signature rather than
+    try/except, so real TypeErrors from bad specs aren't masked."""
+    if not hasattr(jax, "shard_map"):
+        return None
+    try:
+        import inspect
+        params = inspect.signature(jax.shard_map).parameters
+        return "check_vma" if "check_vma" in params else "check_rep"
+    except (TypeError, ValueError):    # unsignaturable wrapper: assume new
+        return "check_vma"
+
+
+_SHARD_MAP_CHECK_KW = _shard_map_check_kwarg()
+
+
+def compat_shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """jax.shard_map across JAX versions: the top-level API only exists on
+    newer JAX; 0.4.x has the experimental one (with check_rep)."""
+    if _SHARD_MAP_CHECK_KW is not None:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             **{_SHARD_MAP_CHECK_KW: check})
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check)
+
+
+def compat_axis_size(name: str):
+    """lax.axis_size across JAX versions (absent on 0.4.x, where
+    psum(1, name) is the idiom)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
 
 
 def norm_axes(v: AxisVal) -> Tuple[str, ...]:

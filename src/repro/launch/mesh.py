@@ -1,6 +1,10 @@
 """Mesh construction. A FUNCTION (not a module-level constant) so importing
 this module never touches jax device state — the dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+
+``compat_make_mesh`` papers over the ``jax.sharding.AxisType`` API, which
+only exists on newer JAX (>= 0.5): on older installs (e.g. 0.4.37) meshes
+are built without explicit axis types, which is the same Auto behaviour.
 """
 
 from __future__ import annotations
@@ -8,17 +12,24 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the installed JAX has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests/benches (defaults to the single real device)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def make_elastic_mesh(model_parallelism: int = 16):
@@ -28,5 +39,4 @@ def make_elastic_mesh(model_parallelism: int = 16):
     model = min(model_parallelism, n)
     while n % model:
         model -= 1
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((n // model, model), ("data", "model"))

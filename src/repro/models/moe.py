@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import compat_axis_size, compat_shard_map
 from repro.models.common import Spec
 
 
@@ -152,11 +153,10 @@ def moe_apply(params, x, dims: MoEDims, *, mesh, batch_axes: Tuple[str, ...],
     # full-manual over the mesh; under multi-pod training the pod dim is
     # handled by vmap(spmd_axis_name="pod") outside (grad_compress.py), whose
     # batching rule extends these specs with the pod axis automatically.
-    y, aux = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(w_spec, x_spec),
-        out_specs=(x_spec, P()),
-        check_vma=False,
+    y, aux = compat_shard_map(
+        body, mesh,
+        (w_spec, x_spec),
+        (x_spec, P()),
     )(params, x)
     return y, aux
 
@@ -196,7 +196,7 @@ def _moe_body_ep(params, x, *, dims: MoEDims, num_local: int, fsdp_axis,
     else:
         y = lax.psum(y, "model").reshape(Bg, S, d)
     # routing is identical across model ranks (single copy); mean over batch
-    aux = lax.psum(aux, "model") / lax.axis_size("model")
+    aux = lax.psum(aux, "model") / compat_axis_size("model")
     if batch_axes:
         aux = lax.pmean(aux, batch_axes)
     return y.reshape(B, S, d), aux
@@ -211,7 +211,7 @@ def _moe_body_ep2d(params, x, *, dims: MoEDims, num_local: int, ffn2d_axis,
     """
     B, S, d = x.shape
     T = B * S
-    dp = lax.axis_size(ffn2d_axis)
+    dp = compat_axis_size(ffn2d_axis)
     my_rank = lax.axis_index(ffn2d_axis)
     e_lo = lax.axis_index("model") * num_local
     nchunks = max(1, (T + chunk_tokens - 1) // chunk_tokens)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import shard
+from repro.distributed.sharding import compat_shard_map, shard
 from repro.models import moe as moe_lib
 from repro.models.api import Model
 from repro.models.common import (
@@ -143,8 +143,8 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
                                      q_block=min(q_block, ql.shape[1]),
                                      k_block=k_block, q_offset=off)
 
-        return jax.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
-                             out_specs=spec, check_vma=False)(q, k, v)
+        return compat_shard_map(body, mesh, (spec, spec, spec),
+                                spec)(q, k, v)
 
     def prefill(params, batch, max_len: Optional[int] = None):
         x = _embed_input(params, batch)

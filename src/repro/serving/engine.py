@@ -8,13 +8,18 @@ caches live in one donated buffer, so decode never reallocates.
 
 This is deliberately the same architecture a TPU pod would run — the jitted
 prefill/decode functions come from launch/steps.py-style builders with the
-production shardings; here they execute on the local mesh."""
+production shardings; here they execute on the local mesh.
+
+Telemetry note: in wall-clock mode the first dispatch of each shape bucket
+includes XLA compilation in its measured service time — a real cold-start
+the tail percentiles deliberately keep. Calibrated-simulation mode
+(``service_model`` + ``VirtualClock``) has no such transient."""
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,9 +27,19 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.batching import AIMDController, bucket
+from repro.core import metrics as M
+from repro.core.metrics import MetricsRegistry
 from repro.distributed.sharding import sharding_context
 from repro.models.api import Model
 from repro.serving.sampler import sample
+
+# Calibrated-simulation hook (DESIGN.md §8): maps ("prefill", batch, tokens)
+# or ("decode", batch, 1) to modeled service seconds, where batch is the
+# *executed* shape (padded prefill bucket; all decode slots) — the shapes the
+# wall-clock engine actually pays for. With one installed, the engine
+# advances its (advanceable) clock by modeled time instead of measuring
+# wall-clock — deterministic, byte-identical telemetry from a seed.
+ServiceModel = Callable[[str, int, int], float]
 
 
 @dataclass
@@ -46,7 +61,10 @@ class LMServer:
     def __init__(self, model: Model, mesh, rules, *, slots: int = 8,
                  max_len: int = 256, slo: float = 0.5,
                  temperature: float = 0.0, eos_token: int = -1,
-                 seed: int = 0):
+                 seed: int = 0, clock: Callable[[], float] = time.perf_counter,
+                 metrics: Optional[MetricsRegistry] = None,
+                 service_model: Optional[ServiceModel] = None,
+                 model_id: str = "lm"):
         self.model = model
         self.mesh = mesh
         self.rules = rules
@@ -54,6 +72,18 @@ class LMServer:
         self.max_len = max_len
         self.temperature = temperature
         self.eos = eos_token
+        self.slo = slo
+        self.clock = clock
+        self.service_model = service_model
+        if service_model is not None and not hasattr(clock, "advance"):
+            # modeled service times with a wall clock would mix timelines:
+            # service_s modeled, latencies/throughput wall-clock
+            raise ValueError(
+                "service_model requires an advanceable clock "
+                "(e.g. metrics.VirtualClock) so the whole report shares "
+                "one timeline")
+        self.model_id = model_id
+        self.metrics = metrics if metrics is not None else MetricsRegistry(slo)
         self.admission = AIMDController(slo, additive=1, init=1,
                                         max_batch=slots)
         self.rng = jax.random.PRNGKey(seed)
@@ -78,12 +108,28 @@ class LMServer:
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                now: Optional[float] = None) -> int:
+        """Enqueue a prompt. ``now`` (when given) must be on the same
+        timeline as this server's ``clock`` — completion telemetry computes
+        ``finish - arrival`` with ``clock()``, so a foreign timestamp (e.g.
+        0.0 against the default wall clock) yields garbage latencies."""
         rid = self._next_id
         self._next_id += 1
+        at = self.clock() if now is None else now
         self._queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                   max_new_tokens,
-                                   time.perf_counter() if now is None else now))
+                                   max_new_tokens, at))
+        self.metrics.inc(M.QUERIES_SUBMITTED)
+        self.metrics.mark(at)
         return rid
+
+    def _service_time(self, kind: str, batch: int, tokens: int,
+                      t0: float) -> float:
+        """Measured wall-clock, or modeled time (advancing the injected
+        clock) in calibrated-simulation mode."""
+        if self.service_model is None:
+            return self.clock() - t0
+        dt = self.service_model(kind, batch, tokens)
+        self.clock.advance(dt)      # ctor guarantees the clock is advanceable
+        return dt
 
     def _prefill_jit(self, b: int, plen: int):
         key = (b, plen)
@@ -109,16 +155,24 @@ class LMServer:
                 batch.append(r)
                 self._queue.remove(r)
         n = len(batch)
+        if n == 0:
+            return
+        self.metrics.observe(M.QUEUE_DEPTH, n + len(self._queue))
         nb = bucket(n, cap=self.slots)
         toks = np.zeros((nb, plen), np.int32)
         for i, r in enumerate(batch):
             toks[i] = r.prompt
-        t0 = time.perf_counter()
+        t0 = self.clock()
         logits, pcache = self._prefill_jit(nb, plen)(
             params, jnp.asarray(toks))
         jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
+        # the service model is charged the *executed* shape (padded bucket),
+        # matching what wall-clock mode measures for the same workload
+        dt = self._service_time("prefill", nb, plen, t0)
         self.admission.record(n, dt)
+        self.metrics.inc(M.QUERIES_SUBMITTED, n, model=self.model_id)
+        self._observe_batch(n, dt)
+        self.metrics.mark(self.clock())
         self.rng, k = jax.random.split(self.rng)
         first = sample(logits, k, temperature=self.temperature)
         first = np.asarray(first)
@@ -136,10 +190,18 @@ class LMServer:
     def _decode_once(self, params) -> None:
         if not self._active:
             return
+        t0 = self.clock()
         self.rng, k = jax.random.split(self.rng)
         toks, self.cache = self._decode(params, self.cache, self.cur_tokens,
                                         self.lengths, k)
         toks = np.asarray(toks)
+        n_active = len(self._active)
+        # executed shape: the jitted decode computes every slot each step
+        # regardless of how many are active, like the wall-clock engine
+        dt = self._service_time("decode", self.slots, 1, t0)
+        # decode steps dominate LM serving work — they count as dispatched
+        # batches alongside prefill, so the report reflects the whole run
+        self._observe_batch(n_active, dt)
         self.lengths = self.lengths + jnp.asarray(
             [1 if s in self._active else 0 for s in range(self.slots)],
             jnp.int32)
@@ -150,9 +212,26 @@ class LMServer:
             if (t == self.eos or len(r.tokens) >= r.max_new_tokens
                     or int(self.lengths[s]) >= self.max_len - 1):
                 r.done = True
-                r.finish_time = time.perf_counter()
+                r.finish_time = self.clock()
                 self.completed[r.request_id] = r
                 del self._active[s]
+                self.metrics.inc(M.QUERIES_COMPLETED)
+                self.metrics.observe_latency(r.finish_time - r.arrival_time)
+                self.metrics.mark(r.finish_time)
+
+    def _observe_batch(self, size: int, service: float) -> None:
+        """One dispatched batch (prefill or decode) into the shared schema —
+        both dispatch paths must stay in lockstep."""
+        self.metrics.inc_both(M.BATCHES, model=self.model_id)
+        self.metrics.observe_both(M.BATCH_SIZE, size, model=self.model_id)
+        self.metrics.observe_both(M.SERVICE, service, model=self.model_id)
+
+    @property
+    def pending(self) -> bool:
+        """True while any request is queued or decoding — the public drive
+        predicate (ScenarioRunner and external loops use this, not the
+        private queue/slot state)."""
+        return bool(self._queue or self._active)
 
     def step(self, params) -> None:
         self._admit(params)
@@ -160,7 +239,7 @@ class LMServer:
 
     def run(self, params, *, max_steps: int = 10_000) -> None:
         steps = 0
-        while (self._queue or self._active) and steps < max_steps:
+        while self.pending and steps < max_steps:
             self.step(params)
             steps += 1
 
@@ -170,6 +249,14 @@ class LMServer:
             "completed": len(self.completed),
             "admission_max_batch": self.admission.max_batch_size,
         }
+
+    def report(self) -> Dict[str, Any]:
+        """Canonical telemetry report (metrics.py schema, shared with the
+        Clipper frontend)."""
+        return self.metrics.report("lmserver")
+
+    def report_json(self, **extra: Any) -> str:
+        return self.metrics.report_json("lmserver", **extra)
 
 
 def _scatter_cache(cache, pcache, src: int, dst: int):

@@ -59,7 +59,9 @@ def _quantized_pod_mean(g: jax.Array) -> jax.Array:
     amax = jnp.max(jnp.abs(gf))                         # scalar collective
     scale = jnp.maximum(amax, 1e-20) / 127.0
     q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
-    total = jnp.sum(q.astype(jnp.int16), axis=0)        # s16 all-reduce on wire
+    # dtype pinned: some JAX versions promote int16 sums to int32, which
+    # would silently double the wire bytes (and break the HLO s16 check)
+    total = jnp.sum(q.astype(jnp.int16), axis=0, dtype=jnp.int16)
     return total.astype(jnp.float32) * (scale / npods)
 
 

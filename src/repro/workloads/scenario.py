@@ -1,0 +1,213 @@
+"""ScenarioRunner: replay a generated arrival trace through either serving
+stack and emit the shared ``repro.metrics/v1`` report.
+
+The named scenarios map to the paper's evaluation (DESIGN.md §9):
+
+* ``poisson``      — steady open-loop load, Fig 4's latency/throughput regime
+* ``bursty``       — MMPP burst/lull load, Fig 5's delayed-batching regime
+* ``diurnal``      — slow rate ramp (InferLine-style day/night profile)
+* ``flash_crowd``  — sudden rate spike: queueing + SLO-violation behaviour
+* ``scaling``      — Fig 6: the same load over 1..R replicas
+* ``stragglers``   — Fig 9: wide ensemble with injected stragglers; deadline
+                     rendering keeps P99 at the SLO while accounting the
+                     dropped models
+
+Both stacks run in calibrated-simulation mode (DESIGN.md §8): service times
+come from seeded latency models and the clock is virtual, so a scenario is a
+pure function of its seed — run it twice, get byte-identical reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.containers import linear_latency
+from repro.core.frontend import make_clipper
+from repro.core.metrics import VirtualClock
+from repro.workloads import traces as T
+
+D_FEAT = 64
+N_CLASSES = 10
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A reproducible load profile plus the serving configuration it drives."""
+
+    name: str
+    kind: str = "poisson"           # poisson | bursty | diurnal | flash_crowd
+    rate: float = 400.0             # mean arrival rate (qps)
+    peak_rate: float = 1200.0       # bursty/diurnal/flash peak (qps)
+    duration: float = 2.0           # trace length (s)
+    seed: int = 0
+    slo: float = 0.020
+    # frontend (Clipper) stack
+    ensemble: int = 2               # models in the ensemble
+    replicas: int = 1               # replicas per model (Fig 6)
+    batch_delay: float = 0.0
+    pool: int = 128                 # unique-query pool (0 = all unique)
+    p_straggle: float = 0.0         # straggler injection (Fig 9)
+    straggle_factor: float = 15.0
+    base_latency: float = 0.002     # container latency model: base + per_item*n
+    per_item_latency: float = 5e-5
+    # lmserver stack
+    slots: int = 4
+    prompt_len: int = 8
+    max_new_tokens: int = 4
+    lm_requests: int = 32           # lmserver replays a fixed request count
+
+    def arrival_times(self) -> np.ndarray:
+        if self.kind == "poisson":
+            return T.poisson_trace(self.rate, self.duration, self.seed)
+        if self.kind == "bursty":
+            return T.bursty_trace(self.rate, self.peak_rate, self.duration,
+                                  self.seed)
+        if self.kind == "diurnal":
+            return T.diurnal_trace(self.rate, self.peak_rate, self.duration,
+                                   self.seed)
+        if self.kind == "flash_crowd":
+            return T.flash_crowd_trace(self.rate, self.peak_rate,
+                                       self.duration, self.seed)
+        raise ValueError(f"unknown trace kind: {self.kind}")
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    "poisson": Scenario("poisson"),
+    "bursty": Scenario("bursty", kind="bursty", rate=150.0, peak_rate=1500.0),
+    "diurnal": Scenario("diurnal", kind="diurnal", rate=100.0,
+                        peak_rate=900.0, duration=4.0),
+    "flash_crowd": Scenario("flash_crowd", kind="flash_crowd", rate=200.0,
+                            peak_rate=2500.0),
+    "scaling": Scenario("scaling", rate=900.0, replicas=4,
+                        base_latency=0.004, pool=0),
+    "stragglers": Scenario("stragglers", rate=250.0, ensemble=4,
+                           p_straggle=0.03, pool=0),
+}
+
+
+def _frontend_models(scenario: Scenario):
+    """Deterministic numpy ensemble of graded quality + latency profiles.
+    Model i is a fixed linear scorer; its latency model is seeded from
+    (scenario.seed, i) so the whole run is a function of the scenario."""
+    rng = np.random.default_rng(scenario.seed + 1)
+    models, lat = {}, {}
+    for i in range(scenario.ensemble):
+        W = rng.normal(size=(D_FEAT, N_CLASSES)).astype(np.float32) * 0.1
+
+        def predict(x, W=W):
+            z = x @ W
+            z = z - z.max(axis=-1, keepdims=True)
+            e = np.exp(z)
+            return e / e.sum(axis=-1, keepdims=True)
+
+        mid = f"m{i}"
+        models[mid] = predict
+        lat[mid] = linear_latency(
+            scenario.base_latency * (1.0 + 0.3 * i),
+            scenario.per_item_latency,
+            p_straggle=scenario.p_straggle,
+            straggle_factor=scenario.straggle_factor,
+            rng=np.random.default_rng(scenario.seed + 1000 + i))
+    return models, lat
+
+
+class ScenarioRunner:
+    """Replays one scenario through a serving stack; ``run`` returns the
+    shared-schema report dict, ``run_json`` its stable JSON rendering."""
+
+    def __init__(self, scenario: Scenario):
+        self.scenario = scenario
+
+    # -- frontend (discrete-event Clipper) ------------------------------
+    def run_frontend(self) -> Dict[str, Any]:
+        s = self.scenario
+        models, lat = _frontend_models(s)
+        clip = make_clipper(models, "exp4", slo=s.slo,
+                            replicas=s.replicas, latency_models=lat,
+                            batch_delay=s.batch_delay, seed=s.seed)
+        trace = T.query_trace(s.arrival_times(), s.seed, d_feat=D_FEAT,
+                              pool=s.pool)
+        clip.replay(trace)
+        return clip.report()
+
+    # -- lmserver (continuous batching) ---------------------------------
+    def run_lmserver(self) -> Dict[str, Any]:
+        """Calibrated simulation: a tiny real model decodes for real, but
+        service times come from a seeded latency model through a virtual
+        clock — deterministic end to end."""
+        import jax
+
+        from repro.configs.registry import ARCHITECTURES, reduced_config
+        from repro.distributed.sharding import serve_rules
+        from repro.launch.mesh import make_local_mesh
+        from repro.models.api import build_model
+        from repro.serving.engine import LMServer
+
+        s = self.scenario
+        mesh = make_local_mesh()
+        rules = serve_rules(multi_pod=False)
+        cfg = reduced_config(ARCHITECTURES["smollm-360m"], num_layers=2,
+                             d_model=64)
+        model = build_model(cfg, mesh, rules)
+        params = model.init(jax.random.PRNGKey(s.seed))
+
+        def service_model(kind: str, batch: int, tokens: int) -> float:
+            if kind == "prefill":
+                return s.base_latency + s.per_item_latency * batch * tokens
+            return s.base_latency / 4 + s.per_item_latency * batch
+
+        clock = VirtualClock()
+        srv = LMServer(model, mesh, rules, slots=s.slots, max_len=64,
+                       slo=s.slo, temperature=0.0, seed=s.seed,
+                       clock=clock, service_model=service_model,
+                       model_id=cfg.name)
+        rng = np.random.default_rng(s.seed)
+        # open-loop arrivals, thinned to a fixed request count so CLI runs
+        # stay cheap; the arrival *process* is the scenario's
+        times = self.scenario.arrival_times()[:s.lm_requests]
+        if len(times) == 0:
+            times = np.asarray([0.0])
+        pending: List[Tuple[float, np.ndarray]] = [
+            (float(t), rng.integers(0, cfg.vocab_size, size=s.prompt_len))
+            for t in times]
+        i = 0
+        while i < len(pending) or srv.pending:
+            # release arrivals up to the virtual now
+            while i < len(pending) and pending[i][0] <= clock.now:
+                at, prompt = pending[i]
+                srv.submit(prompt, max_new_tokens=s.max_new_tokens, now=at)
+                i += 1
+            if not srv.pending and i < len(pending):
+                clock.advance(pending[i][0] - clock.now)   # idle: jump ahead
+                continue
+            srv.step(params)
+        return srv.report()
+
+    # -- entry points ---------------------------------------------------
+    def run(self, stack: str = "frontend") -> Dict[str, Any]:
+        if stack == "frontend":
+            rep = self.run_frontend()
+        elif stack == "lmserver":
+            rep = self.run_lmserver()
+        else:
+            raise ValueError(f"unknown stack: {stack}")
+        rep["scenario"] = dataclasses.asdict(self.scenario)
+        return rep
+
+    def run_json(self, stack: str = "frontend") -> str:
+        import json
+        return json.dumps(self.run(stack), sort_keys=True, indent=2)
+
+
+def run_scenario(name: str, stack: str = "frontend",
+                 **overrides: Any) -> Dict[str, Any]:
+    """Convenience: look up a named scenario, apply overrides, run it."""
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
+    sc = dataclasses.replace(SCENARIOS[name], **overrides)
+    return ScenarioRunner(sc).run(stack)

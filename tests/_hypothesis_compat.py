@@ -1,0 +1,87 @@
+"""``hypothesis`` when installed; a tiny deterministic fallback otherwise.
+
+The real library is strictly better (shrinking, edge-case search, a database
+of past failures) — ``requirements-dev.txt`` pins it for full runs. But it is
+an *optional* dependency: test collection must not die on a bare container.
+The fallback implements exactly the subset this suite uses — ``@given`` over
+``st.integers`` / ``st.floats`` / ``st.lists`` / ``st.tuples`` plus a no-op
+``@settings`` — by running each property on the strategy boundary values
+first (where defined) and then on a fixed-seed random sample, so a run is
+reproducible and still exercises the corners hypothesis would try first.
+"""
+
+from __future__ import annotations
+
+try:                                        # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import itertools
+
+    import numpy as np
+
+    _DEFAULT_EXAMPLES = 25
+    _SEED = 0xC11BBE2
+
+    class _Strategy:
+        """A sampler plus optional boundary examples (tried first)."""
+
+        def __init__(self, sample, boundary=()):
+            self.sample = sample
+            self.boundary = tuple(boundary)
+
+    class st:  # noqa: N801 - mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                boundary=(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                boundary=(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(
+                lambda rng: tuple(e.sample(rng) for e in elems))
+
+    def settings(*, max_examples=None, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def runner():
+                budget = getattr(fn, "_shim_max_examples", None) \
+                    or _DEFAULT_EXAMPLES
+                rng = np.random.default_rng(_SEED)
+                tried = 0
+                if all(s.boundary for s in strategies):
+                    combos = itertools.product(*(s.boundary
+                                                 for s in strategies))
+                    for ex in itertools.islice(combos, min(budget, 8)):
+                        fn(*ex)
+                        tried += 1
+                for _ in range(max(0, budget - tried)):
+                    fn(*(s.sample(rng) for s in strategies))
+
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

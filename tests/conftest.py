@@ -3,12 +3,12 @@ device; only launch/dryrun.py forces 512 placeholder devices."""
 
 import jax
 import pytest
+from repro.launch.mesh import compat_make_mesh
 
 
 @pytest.fixture(scope="session")
 def local_mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="session")

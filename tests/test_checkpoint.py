@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.launch.mesh import compat_make_mesh
 
 
 def _tree(rng):
@@ -49,8 +50,7 @@ def test_shape_mismatch_rejected(tmp_path):
 
 def test_elastic_restore_new_sharding(tmp_path):
     """Restore against a different sharding than the save used."""
-    mesh1 = jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh1 = compat_make_mesh((1, 1), ("data", "model"))
     t = {"w": jax.device_put(
         jnp.arange(16, dtype=jnp.float32).reshape(4, 4),
         jax.sharding.NamedSharding(mesh1, jax.sharding.PartitionSpec()))}

@@ -68,8 +68,8 @@ def test_collective_bytes_counted(tmp_path):
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.launch.hlo_stats import analyze_hlo
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((4,), ("model",))
         def f(x):
             y = jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, P("model")))

@@ -15,6 +15,7 @@ from repro.distributed.sharding import train_rules
 from repro.launch.inputs import (make_concrete, prefill_batch_specs,
                                  train_batch_specs)
 from repro.models.api import build_model
+from repro.launch.mesh import compat_make_mesh
 
 SHAPE = ShapeSpec("smoke", 32, 2, "train")
 ALL_ARCHS = sorted(ARCHITECTURES)
@@ -22,8 +23,7 @@ ALL_ARCHS = sorted(ARCHITECTURES)
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def _build(name, mesh):

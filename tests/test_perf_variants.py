@@ -10,10 +10,15 @@ import pytest
 
 
 def _run(code: str) -> str:
+    import os
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    # keep the parent's platform pin: without it the subprocess probes for
+    # TPUs (60 s stall + log noise) before falling back to host devices
+    if os.environ.get("JAX_PLATFORMS"):
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     r = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)], capture_output=True,
-        text=True, cwd="/root/repo",
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        text=True, cwd="/root/repo", env=env)
     assert r.returncode == 0, r.stderr[-3000:]
     return r.stdout
 
@@ -25,8 +30,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.configs.registry import ARCHITECTURES, reduced_config
 from repro.models.api import build_model
 from repro.distributed.sharding import serve_rules, train_rules
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 """
 
@@ -102,8 +107,8 @@ import jax
 from repro.configs.base import ShapeSpec
 from repro.configs.registry import ARCHITECTURES, reduced_config
 from repro.launch.steps import build_train_step
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = reduced_config(ARCHITECTURES["granite-8b"], num_layers=2, d_model=64)
 shape = ShapeSpec("t", 32, 8, "train")
 with mesh:

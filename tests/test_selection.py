@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.selection import (Exp3Policy, Exp4Policy, exp3_init,
                                   exp3_observe, exp3_probs, exp4_combine,

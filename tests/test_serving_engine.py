@@ -8,12 +8,12 @@ from repro.configs.registry import ARCHITECTURES, reduced_config
 from repro.distributed.sharding import serve_rules
 from repro.models.api import build_model
 from repro.serving.engine import LMServer
+from repro.launch.mesh import compat_make_mesh
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="module")

@@ -9,12 +9,12 @@ from repro.configs.registry import ARCHITECTURES
 from repro.distributed.sharding import (ShardingContext, serve_rules,
                                         strip_pod, train_rules)
 from repro.launch.steps import fit_batch_sharding
+from repro.launch.mesh import compat_make_mesh
 
 
 @pytest.fixture(scope="module")
 def mesh22():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_dedupes_repeated_mesh_axes(mesh22):
@@ -45,8 +45,7 @@ def test_serve_rules_replicate_fsdp():
 
 
 def test_fit_batch_sharding_drops_axes():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     rules = dict(train_rules(False))
     # batch of 1 cannot shard over data=1? it can (1 % 1 == 0)
     out = fit_batch_sharding(rules, mesh, 1)

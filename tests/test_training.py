@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ShapeSpec
 from repro.configs.registry import ARCHITECTURES, reduced_config
@@ -14,12 +14,12 @@ from repro.models.api import build_model
 from repro.training import optimizer as opt_lib
 from repro.training.grad_compress import _accumulate, _quantized_pod_mean
 from repro.training.train_loop import TrainConfig, train
+from repro.launch.mesh import compat_make_mesh
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def test_adamw_reduces_quadratic():

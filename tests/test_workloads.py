@@ -1,0 +1,170 @@
+"""Workload scenarios: trace-generator determinism and statistics, and
+end-to-end scenario replay through BOTH serving stacks with the shared
+telemetry schema as an exact oracle (paper Figs 4/6/9 methodology)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import StreamingHistogram
+from repro.workloads import (Scenario, ScenarioRunner, bursty_trace,
+                             diurnal_trace, flash_crowd_trace, poisson_trace,
+                             query_trace, run_scenario)
+
+
+# ---------------------------------------------------------------------------
+# trace generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda s: poisson_trace(500.0, 1.0, seed=s),
+    lambda s: bursty_trace(100.0, 2000.0, 1.0, seed=s),
+    lambda s: diurnal_trace(100.0, 1000.0, 1.0, seed=s),
+    lambda s: flash_crowd_trace(200.0, 2000.0, 1.0, seed=s),
+])
+def test_traces_deterministic_sorted_in_range(make):
+    a, b = make(7), make(7)
+    np.testing.assert_array_equal(a, b)           # same seed, same trace
+    assert len(a) > 0
+    assert (np.diff(a) >= 0).all()                # sorted
+    assert a[0] >= 0.0 and a[-1] < 1.0            # within [0, duration)
+    c = make(8)
+    assert len(c) != len(a) or not np.array_equal(a, c)
+
+
+def test_poisson_rate_statistics():
+    times = poisson_trace(1000.0, 4.0, seed=0)
+    # E[n] = 4000, sd ~ 63: a 6-sigma band is a deterministic-safe assert
+    assert 3600 < len(times) < 4400
+    gaps = np.diff(times)
+    assert np.mean(gaps) == pytest.approx(1e-3, rel=0.1)
+
+
+def test_bursty_trace_is_actually_bursty():
+    """MMPP coefficient of variation of inter-arrivals exceeds Poisson's 1."""
+    t_mmpp = bursty_trace(50.0, 3000.0, 4.0, seed=3)
+    gaps = np.diff(t_mmpp)
+    cv = np.std(gaps) / np.mean(gaps)
+    assert cv > 1.3
+
+
+def test_flash_crowd_spike_window():
+    times = flash_crowd_trace(100.0, 4000.0, 1.0, seed=1,
+                              spike_start=0.4, spike_duration=0.2)
+    in_spike = ((times >= 0.4) & (times < 0.6)).sum()
+    outside = len(times) - in_spike
+    # spike window is 1/4 the non-spike span but at 40x the rate
+    assert in_spike > 3 * outside
+
+
+def test_query_trace_pool_and_unique():
+    times = poisson_trace(500.0, 0.5, seed=0)
+    pooled = query_trace(times, seed=0, pool=16)
+    uniq = {x.tobytes() for _, x, _ in pooled}
+    assert len(uniq) <= 16
+    fresh = query_trace(times, seed=0, pool=0)
+    assert len({x.tobytes() for _, x, _ in fresh}) == len(times)
+
+
+# ---------------------------------------------------------------------------
+# scenarios through the Clipper frontend (discrete-event, virtual clock)
+# ---------------------------------------------------------------------------
+
+def test_frontend_poisson_report_byte_identical():
+    a = ScenarioRunner(Scenario("t", rate=300.0, duration=1.0)).run("frontend")
+    b = ScenarioRunner(Scenario("t", rate=300.0, duration=1.0)).run("frontend")
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_frontend_poisson_exact_oracles():
+    rep = ScenarioRunner(Scenario("t", rate=300.0, duration=1.0,
+                                  seed=5)).run("frontend")
+    assert rep["schema"] == "repro.metrics/v1"
+    assert rep["queries"]["completed"] == rep["queries"]["submitted"] > 0
+    # light load with deadline rendering: the tail stays under the SLO
+    assert rep["latency_s"]["p99"] <= rep["slo"]["target_s"]
+    assert rep["slo"]["violations"] == 0
+    assert rep["slo"]["rate"] == 0.0
+    # zipf pool of 128 uniques at ~300 queries: the cache must be hitting
+    assert rep["cache"]["hit_rate"] > 0.3
+    assert rep["throughput_qps"] > 0
+
+
+def test_frontend_bursty_exact_oracles():
+    sc = Scenario("t", kind="bursty", rate=100.0, peak_rate=2000.0,
+                  duration=1.0, seed=2)
+    rep1 = ScenarioRunner(sc).run("frontend")
+    rep2 = ScenarioRunner(sc).run("frontend")
+    assert rep1 == rep2                           # exact, not approximate
+    assert rep1["queries"]["completed"] == rep1["queries"]["submitted"]
+    # bursts force multi-query dispatches: adaptive batching must kick in
+    assert rep1["batch_size"]["max"] > 1
+    assert rep1["latency_s"]["p99"] <= sc.slo
+
+
+def test_frontend_straggler_scenario_accounting():
+    rep = run_scenario("stragglers", duration=1.0)
+    assert rep["stragglers"]["partial_queries"] > 0
+    assert (rep["stragglers"]["dropped_models"]
+            >= rep["stragglers"]["partial_queries"])
+    # straggler mitigation pins P99 at the deadline (within half-bucket
+    # histogram resolution), not at the straggler's 15x service time,
+    # and deadline-rendered queries are not SLO violations
+    assert rep["latency_s"]["p99"] <= rep["slo"]["target_s"] * 10 ** (0.5 / 24)
+    assert rep["latency_s"]["max"] <= rep["slo"]["target_s"] + 1e-9
+    assert rep["slo"]["violations"] == 0
+
+
+def test_frontend_scaling_scenario_replicas():
+    rep = run_scenario("scaling", duration=0.5)
+    assert rep["scenario"]["replicas"] == 4
+    assert rep["queries"]["completed"] == rep["queries"]["submitted"]
+
+
+def test_report_p99_matches_reference_histogram():
+    """The report's P99 equals feeding the same latencies through a fresh
+    StreamingHistogram — the metric is a pure function of the observations."""
+    from repro.core.frontend import make_clipper
+    from repro.core.containers import linear_latency
+
+    def fn(x):
+        return np.zeros((len(x), 10), np.float32)
+
+    clip = make_clipper({"m": fn}, "exp4", slo=0.02,
+                        latency_models={"m": linear_latency(0.001, 1e-5)})
+    trace = query_trace(poisson_trace(400.0, 0.5, seed=9), seed=9, pool=0)
+    qids = clip.replay(trace)
+    ref = StreamingHistogram(1e-6, 1e4, 24)
+    for q in qids:
+        ref.observe(clip.results[q].latency)
+    rep = clip.report()
+    assert rep["latency_s"]["p99"] == ref.percentile(99)
+    assert rep["latency_s"]["p50"] == ref.percentile(50)
+
+
+# ---------------------------------------------------------------------------
+# the same scenarios through the LMServer (continuous batching, virtual clock)
+# ---------------------------------------------------------------------------
+
+_LM = dict(duration=0.05, rate=200.0, lm_requests=5, slots=2,
+           prompt_len=4, max_new_tokens=2)
+
+
+def test_lmserver_scenario_schema_matches_frontend():
+    fe = ScenarioRunner(Scenario("t", rate=200.0, duration=0.2)).run("frontend")
+    lm = ScenarioRunner(Scenario("t", **_LM)).run("lmserver")
+    assert lm["schema"] == fe["schema"]
+    assert set(lm) == set(fe)                     # identical top-level schema
+    assert set(lm["latency_s"]) == set(fe["latency_s"])
+    assert set(lm["slo"]) == set(fe["slo"])
+    assert lm["stack"] == "lmserver" and fe["stack"] == "frontend"
+    assert lm["queries"]["completed"] == _LM["lm_requests"]
+    # virtual clock: every request has positive modeled latency
+    assert lm["latency_s"]["min"] > 0
+
+
+def test_lmserver_scenario_deterministic():
+    a = ScenarioRunner(Scenario("t", **_LM)).run("lmserver")
+    b = ScenarioRunner(Scenario("t", **_LM)).run("lmserver")
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
