@@ -1,0 +1,46 @@
+"""Control-plane benchmark: flash-crowd SLO attainment with and without the
+autoscaler, plus admission-controlled overload (DESIGN.md §10).
+
+Calibrated discrete-event simulation under a virtual clock — the replica
+counts and every latency are a pure function of the seed, so the rows are
+reproducible. ``us_per_call`` reports the end-to-end P99; ``derived``
+carries attainment and the replica excursion (steady -> peak -> final)."""
+
+from __future__ import annotations
+
+from repro.cluster import ClusterPlan, cluster_scenario, run_plan
+
+
+def _row(name: str, rep: dict, extra: str = "") -> dict:
+    att = rep["slo"]["attainment"]
+    derived = f"attainment={att:.3f}"
+    if extra:
+        derived += ";" + extra
+    return {"name": name, "us_per_call": rep["latency_s"]["p99"] * 1e6,
+            "derived": derived}
+
+
+def run(rng=None) -> list:
+    rows = []
+    sc = cluster_scenario("flash_crowd")
+    for autoscale in (False, True):
+        rep = run_plan(ClusterPlan(scenario=sc, autoscale=autoscale))
+        if autoscale:
+            a = rep["cluster"]["autoscalers"][0]
+            extra = (f"replicas=1->{a['peak_live']}->{a['live']};"
+                     f"added={a['added']};retired={a['retired']}")
+        else:
+            extra = "replicas=fixed_1"
+        label = "on" if autoscale else "off"
+        rows.append(_row(f"cluster_autoscale/flash_crowd/{label}", rep, extra))
+    # admission control under sustained overload (no autoscaling): early
+    # shedding keeps the served tail inside the SLO regime
+    over = cluster_scenario("poisson", rate=1500.0, duration=1.0)
+    for policy in (None, "shed"):
+        rep = run_plan(ClusterPlan(scenario=over, autoscale=False,
+                                   admission=policy))
+        extra = (f"shed={rep['admission']['shed']};"
+                 f"completed={rep['queries']['completed']}")
+        label = policy or "off"
+        rows.append(_row(f"cluster_admission/overload/{label}", rep, extra))
+    return rows

@@ -13,9 +13,9 @@ import numpy as np
 
 
 def main() -> None:
-    from benchmarks import (bench_batching, bench_cache, bench_context,
-                            bench_ensembles, bench_overhead, bench_scaling,
-                            bench_stragglers)
+    from benchmarks import (bench_autoscale, bench_batching, bench_cache,
+                            bench_context, bench_ensembles, bench_overhead,
+                            bench_scaling, bench_stragglers)
 
     suites = [
         ("fig3/4/5 batching", bench_batching),
@@ -25,6 +25,7 @@ def main() -> None:
         ("fig10 context", bench_context),
         ("fig11 overhead", bench_overhead),
         ("sec4.2 cache", bench_cache),
+        ("control plane", bench_autoscale),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

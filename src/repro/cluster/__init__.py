@@ -1,0 +1,31 @@
+"""SLO-aware control plane (DESIGN.md §10): the subsystem that closes the
+loop between the shared telemetry (``core/metrics.py``) and serving
+capacity.
+
+* ``autoscaler`` — per-model reactive replica controller with hysteresis
+  and a queueing-model target (InferLine-style);
+* ``admission`` — early load shedding: reject-or-degrade queries whose
+  deadline is already unmeetable given the backlog;
+* ``router``    — heterogeneity-aware routing by least expected completion
+  time instead of queue length;
+* ``plan``      — ``ClusterPlan`` + the deterministic tick-driven driver
+  (``python -m repro.cluster.run``) that replays any workload trace through
+  either serving stack with the control plane active, emitting byte-
+  identical ``repro.metrics/v1`` reports per seed.
+"""
+
+from repro.cluster.admission import SloAdmission, expected_delay
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.plan import (CLUSTER_DEFAULTS, ClusterPlan,
+                                cluster_scenario, replica_factory, run_plan,
+                                run_plan_json)
+from repro.cluster.router import (LeastExpectedCompletion, least_loaded,
+                                  make_router)
+
+__all__ = [
+    "SloAdmission", "expected_delay",
+    "Autoscaler", "AutoscalerConfig",
+    "CLUSTER_DEFAULTS", "ClusterPlan", "cluster_scenario", "replica_factory",
+    "run_plan", "run_plan_json",
+    "LeastExpectedCompletion", "least_loaded", "make_router",
+]

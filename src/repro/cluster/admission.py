@@ -1,0 +1,107 @@
+"""SLO-aware admission control: early load shedding (DESIGN.md §10).
+
+Clipper's straggler mitigation (paper §5.2.2) salvages queries *after* they
+blow the deadline; admission control refuses work whose deadline is already
+unmeetable *before* it joins a queue, so overload degrades into explicit
+sheds instead of a collapse of every in-flight query's latency (the
+InferLine observation). The expected delay for a query is estimated from
+current backlog and the per-replica service stats the control plane already
+tracks:
+
+    delay(model) = min over routable replicas i of
+                   max(free_at[i] - now, 0) + (backlog_i + 1) * E[service_i]
+
+Two policies:
+
+* ``shed``    — reject the query outright when *no* chosen model can meet
+                its deadline (and nothing is cached);
+* ``degrade`` — first narrow the ensemble to the models that can meet the
+                deadline (counted as ``queries.degraded``), shedding only
+                when none remain.
+
+Shed and degraded queries are reported through the shared telemetry schema
+(``admission.shed`` / ``admission.degraded``), and sheds count against SLO
+attainment — the controller cannot game the metric by rejecting everything.
+
+``LMAdmission`` applies the same idea in front of the continuous-batching
+``LMServer``: expected wait is the queued backlog spread over the decode
+slots at the observed engine-seconds per request.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core import metrics as M
+from repro.core.containers import ReplicaSet
+from repro.core.interfaces import Query
+
+POLICIES = ("shed", "degrade")
+
+
+def expected_delay(rs: ReplicaSet, now: float,
+                   default_service: float = 0.0) -> float:
+    """Expected queueing + service delay for a query enqueued now — the
+    best (earliest) expected completion across routable replicas."""
+    # deliberately narrower than ReplicaSet.candidates(): when every replica
+    # has failed, the expected delay is infinite and the query should shed,
+    # not be estimated against a dead slot
+    cands = rs.routable() or rs.healthy()
+    if not cands:
+        return float("inf")
+    return min(rs.expected_completion(i, now, default_service)
+               for i in cands)
+
+
+class SloAdmission:
+    """Admission controller for the Clipper frontend (and, via ``admit_lm``,
+    the LMServer). ``margin`` scales the delay estimate: > 1 sheds earlier
+    (more headroom), < 1 gambles on the estimate being pessimistic."""
+
+    def __init__(self, *, policy: str = "degrade", margin: float = 1.0,
+                 default_service: float = 0.0):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}: {policy!r}")
+        self.policy = policy
+        self.margin = margin
+        self.default_service = default_service
+
+    # -- frontend hook (Clipper.submit) ---------------------------------
+    def admit(self, clip, q: Query, chosen: Sequence[str], *,
+              cached: bool = False) -> List[str]:
+        """Return the subset of ``chosen`` to actually enqueue. Empty with
+        ``cached=False`` means the query is shed (counted here); empty with
+        ``cached=True`` degrades to a cache-only answer."""
+        slack = (q.deadline - clip.now) if q.deadline is not None else None
+        if slack is None:
+            return list(chosen)
+        meetable = [
+            mid for mid in chosen
+            if expected_delay(clip.replica_sets[mid], clip.now,
+                              self.default_service) * self.margin <= slack
+        ]
+        if self.policy == "shed":
+            if meetable or cached:
+                return list(chosen)
+            clip.metrics.inc(M.QUERIES_SHED)
+            return []
+        if not meetable:
+            if cached:
+                clip.metrics.inc(M.QUERIES_DEGRADED)
+                return []
+            clip.metrics.inc(M.QUERIES_SHED)
+            return []
+        if len(meetable) < len(chosen):
+            clip.metrics.inc(M.QUERIES_DEGRADED)
+        return meetable
+
+    # -- LMServer hook (engine.submit) ----------------------------------
+    def admit_lm(self, srv, now: float) -> bool:
+        """Admit unless the queued backlog alone is expected to eat the
+        whole SLO before this request reaches a slot."""
+        est = srv.est_request_service()
+        if est <= 0.0:
+            return True                    # no signal yet: admit
+        backlog = len(srv._queue)
+        wait = (backlog + 1) * est / max(srv.slots, 1)
+        return wait * self.margin <= srv.slo

@@ -1,0 +1,200 @@
+"""ClusterPlan + the deterministic control-loop driver (DESIGN.md §10).
+
+A ``ClusterPlan`` bundles a workload ``Scenario`` with the control-plane
+configuration — autoscaling, admission policy, routing strategy, and the
+control tick. ``run_plan`` replays the scenario's arrival trace through the
+chosen serving stack with the control plane active, invoking the autoscaler
+at every tick boundary of the virtual clock, and emits the shared
+``repro.metrics/v1`` report plus a ``cluster`` section (replica timeline,
+scale events, per-replica stats). Everything is a pure function of the
+plan, so the same plan run twice yields byte-identical JSON.
+
+The cluster scenario defaults differ from the plain workload defaults:
+one model, unique queries, and a heavier per-item cost (2 ms), so a single
+replica saturates near 450 qps under the 20 ms SLO — the regime where a
+flash crowd actually needs the control plane (paper Fig 6 territory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.cluster.admission import SloAdmission
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.router import make_router
+from repro.core.containers import JaxModelContainer, linear_latency
+from repro.core.frontend import make_clipper
+from repro.workloads import traces as T
+from repro.workloads.scenario import (D_FEAT, SCENARIOS, Scenario,
+                                      ScenarioRunner, frontend_models,
+                                      trace_meta)
+
+# Overrides applied by ``cluster_scenario`` on top of the named workload
+# scenarios: the control-plane regime (single capacity-limited model).
+CLUSTER_DEFAULTS: Dict[str, Any] = dict(
+    ensemble=1, replicas=1, pool=0, per_item_latency=2e-3)
+
+
+def cluster_scenario(name: str, **overrides: Any) -> Scenario:
+    """A named workload scenario re-parameterized for control-plane runs."""
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
+    return dataclasses.replace(SCENARIOS[name],
+                               **{**CLUSTER_DEFAULTS, **overrides})
+
+
+@dataclass(frozen=True)
+class ClusterPlan:
+    """One reproducible control-plane run."""
+
+    scenario: Scenario
+    stack: str = "frontend"         # frontend | lmserver
+    autoscale: bool = True          # frontend stack only
+    admission: Optional[str] = None          # None | shed | degrade
+    router: str = "lect"            # lect | least_loaded
+    tick: float = 0.05              # control period (virtual seconds)
+    utilization_cap: float = 0.7
+    drain_target: Optional[float] = None     # None = the scenario SLO
+    min_replicas: int = 1
+    max_replicas: int = 8
+    up_ticks: int = 1
+    down_ticks: int = 4
+    cooldown_ticks: int = 12        # quiescent ticks so scale-down settles
+    admission_margin: float = 1.0
+
+    def autoscaler_config(self) -> AutoscalerConfig:
+        return AutoscalerConfig(
+            tick=self.tick, utilization_cap=self.utilization_cap,
+            drain_target=self.drain_target, min_replicas=self.min_replicas,
+            max_replicas=self.max_replicas, up_ticks=self.up_ticks,
+            down_ticks=self.down_ticks)
+
+    def describe(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        del d["scenario"]           # reported separately
+        return d
+
+
+def replica_factory(scenario: Scenario, models: Dict[str, Any]):
+    """Deterministic supplier of fresh replicas for the autoscaler: replica
+    k of model i draws its latency stream from seed (scenario.seed, i, k),
+    so an autoscaled run is byte-identical across runs while every replica
+    straggles independently."""
+    ids = sorted(models)
+    counters: Dict[str, int] = {}
+
+    def make(mid: str) -> JaxModelContainer:
+        k = counters.get(mid, 0)
+        counters[mid] = k + 1
+        i = ids.index(mid)
+        lat = linear_latency(
+            scenario.base_latency * (1.0 + 0.3 * i),
+            scenario.per_item_latency,
+            p_straggle=scenario.p_straggle,
+            straggle_factor=scenario.straggle_factor,
+            rng=np.random.default_rng([scenario.seed, 7000 + i, k]))
+        return JaxModelContainer(mid, models[mid], latency_model=lat)
+
+    return make
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def _run_frontend(plan: ClusterPlan) -> Dict[str, Any]:
+    s = plan.scenario
+    models, lat = frontend_models(s)
+    admission = (SloAdmission(policy=plan.admission,
+                              margin=plan.admission_margin)
+                 if plan.admission else None)
+    clip = make_clipper(models, "exp4", slo=s.slo, replicas=s.replicas,
+                        latency_models=lat, batch_delay=s.batch_delay,
+                        seed=s.seed, router=make_router(plan.router),
+                        admission=admission)
+    autoscalers: List[Autoscaler] = []
+    if plan.autoscale:
+        factory = replica_factory(s, models)
+        cfg = plan.autoscaler_config()
+        for mid in sorted(clip.replica_sets):
+            autoscalers.append(Autoscaler(clip.replica_sets[mid], factory,
+                                          clip.metrics, cfg, slo=s.slo))
+    trace = T.query_trace(s.arrival_times(), s.seed, d_feat=D_FEAT,
+                          pool=s.pool)
+    # tick-driven replay: arrivals are interleaved with event processing as
+    # in Clipper.replay, but the clock is stepped in control periods and
+    # every autoscaler observes the world at each boundary
+    i, t, idle = 0, 0.0, 0
+    while True:
+        t += plan.tick
+        while i < len(trace) and trace[i][0] <= t:
+            at, x, ctx = trace[i]
+            clip.run(until=at)
+            clip.submit(x, context_id=ctx, arrival_time=at)
+            i += 1
+        clip.run(until=t)
+        if clip.now < t:
+            # idle gap: advance the virtual clock so delayed batches and
+            # drain checks see time passing, then dispatch what became ready
+            clip.now = t
+            clip.run(until=t)
+        for a in autoscalers:
+            a.tick(t)
+        if i >= len(trace) and not clip.pending:
+            idle += 1
+            # end only after the cooldown AND once every autoscaler has
+            # drained back to its floor — a short trace that ends mid-burst
+            # must still unwind its scale-ups (one retire per tick, so this
+            # terminates within max_replicas extra ticks)
+            if (idle > plan.cooldown_ticks
+                    and all(a.rs.n_live <= a.cfg.min_replicas
+                            for a in autoscalers)):
+                break
+        else:
+            idle = 0
+    rep = clip.report()
+    rep["cluster"] = {
+        "plan": plan.describe(),
+        "autoscalers": [a.summary() for a in autoscalers],
+        "replica_sets": {mid: {"live": rs.n_live,
+                               "total_slots": len(rs.replicas),
+                               "replicas": rs.replica_stats()}
+                         for mid, rs in sorted(clip.replica_sets.items())},
+    }
+    return rep
+
+
+def _run_lmserver(plan: ClusterPlan) -> Dict[str, Any]:
+    s = plan.scenario
+    admission = (SloAdmission(policy=plan.admission,
+                              margin=plan.admission_margin)
+                 if plan.admission else None)
+    runner = ScenarioRunner(s)
+    rep = runner.run_lmserver(admission=admission)
+    rep["cluster"] = {"plan": plan.describe(), "autoscalers": [],
+                      "replica_sets": {}}
+    return rep
+
+
+def run_plan(plan: ClusterPlan) -> Dict[str, Any]:
+    """Execute the plan; returns the shared-schema report with the extra
+    ``cluster`` section and trace provenance ``meta``."""
+    if plan.stack == "frontend":
+        rep = _run_frontend(plan)
+    elif plan.stack == "lmserver":
+        rep = _run_lmserver(plan)
+    else:
+        raise ValueError(f"unknown stack: {plan.stack}")
+    rep["scenario"] = dataclasses.asdict(plan.scenario)
+    rep["meta"] = trace_meta(plan.scenario)
+    return rep
+
+
+def run_plan_json(plan: ClusterPlan) -> str:
+    """Stable JSON rendering — byte-identical for identical plans."""
+    return json.dumps(run_plan(plan), sort_keys=True, indent=2)

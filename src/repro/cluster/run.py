@@ -1,0 +1,96 @@
+"""CLI: replay a workload scenario with the control plane active and print
+the structured report.
+
+    PYTHONPATH=src python -m repro.cluster.run --scenario flash_crowd
+    PYTHONPATH=src python -m repro.cluster.run --scenario flash_crowd \
+        --no-autoscale --admission shed --report-out report.json
+    PYTHONPATH=src python -m repro.cluster.run --scenario diurnal --seed 7
+
+The report is the shared ``repro.metrics/v1`` schema plus a ``cluster``
+section: the plan, per-model replica timelines, scale events, and
+per-replica accounting. Output is deterministic: the same plan yields
+byte-identical JSON (DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.cluster.admission import POLICIES
+from repro.cluster.plan import ClusterPlan, cluster_scenario, run_plan_json
+from repro.cluster.router import ROUTERS
+from repro.workloads.scenario import SCENARIOS
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.cluster.run",
+        description="Replay a workload scenario with the SLO-aware control "
+                    "plane (autoscaling, admission control, heterogeneous "
+                    "routing) and emit a telemetry report.")
+    p.add_argument("--scenario", default="flash_crowd",
+                   choices=sorted(SCENARIOS),
+                   help="named load profile (re-parameterized for the "
+                        "control-plane regime; see DESIGN.md §10)")
+    p.add_argument("--stack", default="frontend",
+                   choices=("frontend", "lmserver"),
+                   help="serving stack to drive (autoscaling: frontend only)")
+    p.add_argument("--seed", type=int, default=None,
+                   help="override the scenario seed")
+    p.add_argument("--duration", type=float, default=None,
+                   help="override the trace duration (s)")
+    p.add_argument("--rate", type=float, default=None,
+                   help="override the mean arrival rate (qps)")
+    p.add_argument("--replicas", type=int, default=None,
+                   help="initial replicas per model")
+    p.add_argument("--no-autoscale", dest="autoscale", action="store_false",
+                   help="freeze replica counts (fixed-capacity baseline)")
+    p.add_argument("--admission", default=None, choices=POLICIES,
+                   help="SLO-aware admission policy (default: off)")
+    p.add_argument("--router", default="lect", choices=sorted(ROUTERS),
+                   help="replica routing strategy")
+    p.add_argument("--tick", type=float, default=0.05,
+                   help="control period in virtual seconds")
+    p.add_argument("--max-replicas", type=int, default=8,
+                   help="autoscaler ceiling per model")
+    p.add_argument("--report-out", default=None,
+                   help="write the JSON report here instead of stdout")
+    return p
+
+
+def main(argv=None) -> int:
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    overrides = {k: v for k, v in (("seed", args.seed),
+                                   ("duration", args.duration),
+                                   ("rate", args.rate),
+                                   ("replicas", args.replicas))
+                 if v is not None}
+    sc = cluster_scenario(args.scenario, **overrides)
+    if sc.duration <= 0:
+        parser.error("--duration must be > 0")
+    if sc.rate <= 0:
+        parser.error("--rate must be > 0")
+    if sc.kind != "poisson" and sc.rate > sc.peak_rate:
+        parser.error(f"--rate {sc.rate:g} exceeds the {sc.name!r} scenario's "
+                     f"peak rate {sc.peak_rate:g}")
+    if sc.replicas < 1:
+        parser.error("--replicas must be >= 1")
+    if args.tick <= 0:
+        parser.error("--tick must be > 0")
+    plan = ClusterPlan(scenario=sc, stack=args.stack,
+                       autoscale=args.autoscale, admission=args.admission,
+                       router=args.router, tick=args.tick,
+                       max_replicas=args.max_replicas)
+    text = run_plan_json(plan)
+    if args.report_out:
+        with open(args.report_out, "w") as f:
+            f.write(text + "\n")
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -162,6 +162,22 @@ class BatchQueue:
     def put(self, query: Query) -> None:
         self._q.append(query)
 
+    def requeue_to(self, other: "BatchQueue") -> int:
+        """Hand every queued query to another queue, merge-ordered by
+        arrival time (drain support: a retiring replica gives its backlog to
+        a live one without dropping or reordering work). Returns the number
+        of queries moved."""
+        if other is self:
+            return 0
+        moved = len(self._q)
+        if moved:
+            merged = sorted(list(other._q) + list(self._q),
+                            key=lambda q: (q.arrival_time, q.query_id))
+            other._q.clear()
+            other._q.extend(merged)
+            self._q.clear()
+        return moved
+
     def __len__(self) -> int:
         return len(self._q)
 

@@ -22,14 +22,18 @@ from repro.core import metrics as M
 
 
 def digest(x: Any) -> Hashable:
-    """Stable digest of a query input (arrays hashed by content)."""
+    """Stable digest of a query input (arrays hashed by content).
+
+    Non-array leaves carry their type name: Python hashes ``1``, ``1.0``
+    and ``True`` identically, so without it those collide as cache keys —
+    and a ``list`` input would collide with the same-valued ``tuple``."""
     if isinstance(x, np.ndarray):
         return hashlib.blake2b(
             x.tobytes() + str(x.shape).encode() + str(x.dtype).encode(),
             digest_size=16).hexdigest()
     if isinstance(x, (list, tuple)):
-        return tuple(digest(v) for v in x)
-    return x
+        return (type(x).__name__,) + tuple(digest(v) for v in x)
+    return (type(x).__name__, x)
 
 
 class ClockCache:

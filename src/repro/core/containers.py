@@ -23,6 +23,13 @@ from repro.core.batching import AIMDController, BatchQueue, bucket
 
 LatencyModel = Callable[[int], float]    # batch_size -> service seconds
 
+# Default-stream spawner for latency models constructed without an explicit
+# rng: every call takes its own child of this seed sequence, so two
+# independently-constructed containers draw *independent* jitter/straggler
+# streams (with a shared default_rng(0) they straggled in lockstep).
+# Construction order is deterministic, so runs stay reproducible.
+_DEFAULT_LATENCY_SEEDS = np.random.SeedSequence(0)
+
 
 def linear_latency(base: float, per_item: float,
                    jitter: float = 0.0, p_straggle: float = 0.0,
@@ -30,7 +37,8 @@ def linear_latency(base: float, per_item: float,
                    rng: Optional[np.random.Generator] = None) -> LatencyModel:
     """The paper's empirically-observed linear latency profile (Fig 3), with
     optional straggler injection for §5.2.2 experiments."""
-    rng = rng or np.random.default_rng(0)
+    if rng is None:
+        rng = np.random.default_rng(_DEFAULT_LATENCY_SEEDS.spawn(1)[0])
 
     def model(n: int) -> float:
         t = base + per_item * n
@@ -95,7 +103,14 @@ class ReplicaSet:
     """Container replicas with per-replica adaptive batching (paper §4.4.1).
 
     Replicas may have heterogeneous performance (different latency models);
-    dispatch picks the earliest-free replica."""
+    dispatch picks the earliest-free replica.
+
+    The set is *dynamic* (control plane, DESIGN.md §10): ``add_replica``
+    grows capacity mid-run and ``retire_replica`` shrinks it gracefully —
+    the retiring replica's backlog is requeued to a live replica and its
+    in-flight batch finishes before the slot is reaped. Slots are never
+    reused, so replica indices held by in-flight completion events stay
+    valid for the whole run."""
 
     def __init__(self, replicas: Sequence[JaxModelContainer],
                  make_controller: Callable[[], AIMDController],
@@ -103,23 +118,117 @@ class ReplicaSet:
         assert replicas
         self.model_id = replicas[0].model_id
         self.replicas = list(replicas)
+        self._make_controller = make_controller
+        self._batch_delay = batch_delay
+        self._metrics = None
         self.queues = [BatchQueue(make_controller(), batch_delay)
                        for _ in replicas]
         self.free_at = [0.0 for _ in replicas]
+        self.draining = [False for _ in replicas]
+        self.retired = [False for _ in replicas]
 
     def attach_metrics(self, metrics) -> None:
         """Point every queue (current or replaced) at a shared registry —
         call this again after swapping queues so per-model telemetry
         survives reconstruction."""
+        self._metrics = metrics
         for queue in self.queues:
             queue.metrics = metrics
             queue.model_id = self.model_id
 
     def healthy(self) -> List[int]:
-        return [i for i, r in enumerate(self.replicas) if not r.fail]
+        return [i for i, r in enumerate(self.replicas)
+                if not r.fail and not self.retired[i]]
 
-    def pick(self, now: float) -> Optional[int]:
-        h = self.healthy()
-        if not h:
-            return None
-        return min(h, key=lambda i: max(self.free_at[i], now))
+    def routable(self) -> List[int]:
+        """Replicas eligible for *new* work: healthy and not draining."""
+        return [i for i in self.healthy() if not self.draining[i]]
+
+    def candidates(self) -> List[int]:
+        """The one enqueue-eligibility chain routing shares: routable
+        replicas, else merely healthy (everything draining), else every
+        slot (everything failed — keep accepting work so recovery can
+        drain it)."""
+        return (self.routable() or self.healthy()
+                or list(range(len(self.queues))))
+
+    @property
+    def n_live(self) -> int:
+        return len(self.routable())
+
+    # -- dynamic capacity (control plane) -------------------------------
+    def add_replica(self, container: JaxModelContainer,
+                    now: float = 0.0) -> int:
+        """Grow capacity with a fresh replica (own queue + controller);
+        returns its index. Telemetry attaches automatically when a registry
+        was installed."""
+        assert container.model_id == self.model_id
+        queue = BatchQueue(self._make_controller(), self._batch_delay)
+        if self._metrics is not None:
+            queue.metrics = self._metrics
+            queue.model_id = self.model_id
+        self.replicas.append(container)
+        self.queues.append(queue)
+        self.free_at.append(float(now))
+        self.draining.append(False)
+        self.retired.append(False)
+        return len(self.replicas) - 1
+
+    def retire_replica(self, ri: int, now: float = 0.0) -> None:
+        """Begin a graceful drain: the replica stops receiving new work,
+        its queued backlog moves to the least-loaded live replica, and its
+        in-flight batch (if any) runs to completion before ``reap``
+        finalizes the slot."""
+        if self.retired[ri] or self.draining[ri]:
+            return
+        targets = [i for i in self.routable() if i != ri]
+        if not targets:
+            raise ValueError("cannot retire the last live replica")
+        self.draining[ri] = True
+        tgt = min(targets, key=lambda i: (len(self.queues[i]), i))
+        self.queues[ri].requeue_to(self.queues[tgt])
+        self.reap(now)
+
+    def reap(self, now: float) -> None:
+        """Finalize draining replicas whose in-flight work has completed."""
+        for i in range(len(self.replicas)):
+            if (self.draining[i] and not self.retired[i]
+                    and not self.queues[i] and self.free_at[i] <= now):
+                self.draining[i] = False
+                self.retired[i] = True
+
+    def est_service(self, ri: int, default: float = 0.0) -> float:
+        """Observed mean service seconds per query for one replica (its
+        cumulative busy time over queries served) — the per-replica stat
+        heterogeneity-aware routing and the autoscaler's queueing model
+        consume."""
+        st = self.replicas[ri].stats
+        return st.busy_time / st.queries if st.queries else default
+
+    def expected_completion(self, ri: int, now: float,
+                            default: float = 0.0) -> float:
+        """Expected time from ``now`` until a query enqueued on replica
+        ``ri`` would finish: residual busy time plus the backlog (and the
+        query itself) at the observed per-query service estimate. The one
+        ECT formula both the router and admission control consume."""
+        wait = max(self.free_at[ri] - now, 0.0)
+        est = self.est_service(ri, default)
+        return wait + (len(self.queues[ri]) + 1) * est
+
+    def mean_service(self, default: float = 0.0) -> float:
+        """Set-wide mean service seconds per query across every replica."""
+        busy = sum(r.stats.busy_time for r in self.replicas)
+        queries = sum(r.stats.queries for r in self.replicas)
+        return busy / queries if queries else default
+
+    def replica_stats(self) -> List[Dict[str, Any]]:
+        """Per-replica accounting snapshot (control-plane introspection)."""
+        return [{
+            "replica": i,
+            "batches": r.stats.batches,
+            "queries": r.stats.queries,
+            "busy_time": r.stats.busy_time,
+            "queued": len(self.queues[i]),
+            "draining": self.draining[i],
+            "retired": self.retired[i],
+        } for i, r in enumerate(self.replicas)]

@@ -27,7 +27,7 @@ from repro.core.cache import PredictionCache
 from repro.core.containers import JaxModelContainer, ReplicaSet
 from repro.core.interfaces import Feedback, Prediction, Query
 from repro.core.metrics import (MetricsRegistry, QUERIES_COMPLETED,
-                                QUERIES_SUBMITTED)
+                                QUERIES_ROUTED, QUERIES_SUBMITTED)
 from repro.core.selection import Exp3Policy, Exp4Policy
 from repro.core.straggler import assemble_preds, record_stragglers
 
@@ -48,10 +48,17 @@ class Clipper:
                  loss_fn: Optional[Callable[[Any, Any], float]] = None,
                  contextual_store=None, seed: int = 0,
                  use_cache: bool = True,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 router: Optional[Callable[[ReplicaSet, float], int]] = None,
+                 admission=None):
         self.replica_sets = replica_sets
         self.policy = policy
         self.slo = slo
+        # control-plane hooks (repro.cluster, DESIGN.md §10): ``router``
+        # maps (replica_set, now) -> replica index for each enqueue;
+        # ``admission`` may narrow or reject the chosen ensemble per query
+        self.router = router
+        self.admission = admission
         self.metrics = metrics if metrics is not None else MetricsRegistry(slo)
         self.cache = (PredictionCache(cache_size, metrics=self.metrics)
                       if use_cache else None)
@@ -69,6 +76,7 @@ class Clipper:
         self.now = 0.0
         self._pending: Dict[int, dict] = {}     # qid -> bookkeeping
         self.results: Dict[int, Prediction] = {}
+        self.shed_qids: set = set()     # admission-rejected; never in results
         self._feedback_hits = 0
         self._feedback_misses = 0
 
@@ -85,15 +93,28 @@ class Clipper:
         qid = next(self._qseq)
         q = Query(qid, x, context_id, at, deadline=at + self.slo)
         chosen = self.policy.select(self._policy_state_for(q), x, self.rng)
-        entry = {"query": q, "need": set(chosen), "preds": {}, "done": False}
-        self._pending[qid] = entry
+        cached: Dict[str, Any] = {}
+        uncached: List[str] = []
         for mid in chosen:
             if self.cache is not None and self.cache.request(mid, x):
-                entry["preds"][mid] = self.cache.fetch(mid, x)
+                cached[mid] = self.cache.fetch(mid, x)
             else:
-                self.replica_sets[mid].queues[0].put(q) \
-                    if len(self.replica_sets[mid].queues) == 1 else \
-                    self._enqueue_least_loaded(mid, q)
+                uncached.append(mid)
+        if self.admission is not None and uncached:
+            # early load shedding (DESIGN.md §10): drop models (or the whole
+            # query) whose deadline is already unmeetable given the backlog
+            uncached = self.admission.admit(self, q, uncached,
+                                            cached=bool(cached))
+            if not uncached and not cached:
+                # shed: never enqueued, never completes — callers checking
+                # ``results[qid]`` must consult ``shed_qids`` first
+                self.shed_qids.add(qid)
+                return qid
+        entry = {"query": q, "need": set(cached) | set(uncached),
+                 "preds": cached, "done": False}
+        self._pending[qid] = entry
+        for mid in uncached:
+            self._route(mid, q)
         self._push(q.deadline, "deadline", qid)
         self._maybe_finalize(entry)
         return qid
@@ -148,7 +169,8 @@ class Clipper:
                 for ri, queue in enumerate(rs.queues):
                     if not queue.ready(self.now):
                         continue
-                    if rs.free_at[ri] > self.now or rs.replicas[ri].fail:
+                    if (rs.free_at[ri] > self.now or rs.replicas[ri].fail
+                            or rs.retired[ri]):
                         continue
                     batch = queue.next_batch(self.now)
                     if not batch:
@@ -221,11 +243,17 @@ class Clipper:
             self.contextual.observe_exp4(np.asarray([fb.context_id]),
                                          lvec[None, :])
 
-    def _enqueue_least_loaded(self, mid: str, q: Query) -> None:
+    def _route(self, mid: str, q: Query) -> None:
+        """Enqueue on the replica the router picks (default: least-loaded
+        among routable replicas) and count the routed demand — the arrival
+        signal the autoscaler's queueing model samples."""
         rs = self.replica_sets[mid]
-        h = rs.healthy() or list(range(len(rs.queues)))
-        ri = min(h, key=lambda i: len(rs.queues[i]))
+        if self.router is not None:
+            ri = self.router(rs, self.now)
+        else:
+            ri = min(rs.candidates(), key=lambda i: len(rs.queues[i]))
         rs.queues[ri].put(q)
+        self.metrics.inc(QUERIES_ROUTED, model=mid)
 
     def _push(self, at: float, kind: str, payload) -> None:
         heapq.heappush(self._events, _Event(at, next(self._eseq), kind, payload))
@@ -242,6 +270,16 @@ class Clipper:
         return qids
 
     # ------------------------------------------------------------------
+    @property
+    def pending(self) -> bool:
+        """True while any event is scheduled or any query sits in a replica
+        queue — the external drive predicate (the control-plane loop uses
+        this, not the private event heap)."""
+        if self._events:
+            return True
+        return any(len(queue) > 0 for rs in self.replica_sets.values()
+                   for queue in rs.queues)
+
     @property
     def feedback_cache_hit_rate(self) -> float:
         tot = self._feedback_hits + self._feedback_misses

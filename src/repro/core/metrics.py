@@ -32,6 +32,11 @@ SCHEMA = "repro.metrics/v1"
 # Canonical metric names — both stacks use exactly these.
 QUERIES_SUBMITTED = "queries.submitted"
 QUERIES_COMPLETED = "queries.completed"
+QUERIES_SHED = "queries.shed"          # admission-rejected before enqueue
+QUERIES_DEGRADED = "queries.degraded"  # served with a reduced ensemble
+QUERIES_ROUTED = "queries.routed"      # enqueued to a model's replica set
+REPLICAS_ADDED = "cluster.replicas_added"
+REPLICAS_RETIRED = "cluster.replicas_retired"
 SLO_VIOLATIONS = "slo.violations"
 CACHE_HITS = "cache.hits"
 CACHE_MISSES = "cache.misses"
@@ -243,6 +248,9 @@ class MetricsRegistry:
     def report(self, stack: str) -> Dict[str, Any]:
         """The canonical cross-stack report (``repro.metrics/v1``)."""
         completed = self.counter(QUERIES_COMPLETED)
+        submitted = self.counter(QUERIES_SUBMITTED)
+        violations = self.counter(SLO_VIOLATIONS)
+        shed = self.counter(QUERIES_SHED)
         hits, misses = self.counter(CACHE_HITS), self.counter(CACHE_MISSES)
         dur = self.duration
         rep = {
@@ -250,16 +258,25 @@ class MetricsRegistry:
             "stack": stack,
             "duration_s": dur,
             "queries": {
-                "submitted": self.counter(QUERIES_SUBMITTED),
+                "submitted": submitted,
                 "completed": completed,
             },
             "throughput_qps": (completed / dur) if dur > 0 else 0.0,
             "latency_s": self._hist_summary(LATENCY),
             "slo": {
                 "target_s": self.slo,
-                "violations": self.counter(SLO_VIOLATIONS),
-                "rate": (self.counter(SLO_VIOLATIONS) / completed
-                         if completed else 0.0),
+                "violations": violations,
+                "rate": (violations / completed if completed else 0.0),
+                # fraction of *submitted* queries answered within the SLO —
+                # shed queries count against attainment, so admission control
+                # can't game the metric by rejecting everything
+                "attainment": ((completed - violations) / submitted
+                               if submitted else 1.0),
+            },
+            "admission": {
+                "shed": shed,
+                "degraded": self.counter(QUERIES_DEGRADED),
+                "shed_rate": shed / submitted if submitted else 0.0,
             },
             "cache": {
                 "hits": hits,

@@ -64,7 +64,7 @@ class LMServer:
                  seed: int = 0, clock: Callable[[], float] = time.perf_counter,
                  metrics: Optional[MetricsRegistry] = None,
                  service_model: Optional[ServiceModel] = None,
-                 model_id: str = "lm"):
+                 model_id: str = "lm", admission_control=None):
         self.model = model
         self.mesh = mesh
         self.rules = rules
@@ -84,6 +84,12 @@ class LMServer:
                 "one timeline")
         self.model_id = model_id
         self.metrics = metrics if metrics is not None else MetricsRegistry(slo)
+        # SLO-aware admission control (repro.cluster.admission): consulted
+        # per submit; rejected requests are shed before they touch the
+        # queue. Distinct from ``self.admission``, the AIMD *batch-size*
+        # controller that governs prefill admission below.
+        self.admission_control = admission_control
+        self.shed = 0
         self.admission = AIMDController(slo, additive=1, init=1,
                                         max_batch=slots)
         self.rng = jax.random.PRNGKey(seed)
@@ -115,11 +121,26 @@ class LMServer:
         rid = self._next_id
         self._next_id += 1
         at = self.clock() if now is None else now
-        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                   max_new_tokens, at))
         self.metrics.inc(M.QUERIES_SUBMITTED)
         self.metrics.mark(at)
+        if (self.admission_control is not None
+                and not self.admission_control.admit_lm(self, at)):
+            self.metrics.inc(M.QUERIES_SHED)
+            self.shed += 1
+            return rid              # shed — never queued, never completes
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new_tokens, at))
         return rid
+
+    def est_request_service(self) -> float:
+        """Observed engine-seconds per completed request — the backlog-drain
+        estimate admission control consumes. Zero until the first completion
+        (admit everything while there is no signal)."""
+        done = self.metrics.counter(M.QUERIES_COMPLETED)
+        h = self.metrics.hist(M.SERVICE, model=self.model_id)
+        if not done or h is None:
+            return 0.0
+        return h.total / done
 
     def _service_time(self, kind: str, batch: int, tokens: int,
                       t0: float) -> float:
@@ -247,6 +268,7 @@ class LMServer:
     def stats(self) -> Dict[str, Any]:
         return {
             "completed": len(self.completed),
+            "shed": self.shed,
             "admission_max_batch": self.admission.max_batch_size,
         }
 

@@ -10,13 +10,15 @@ methodology; DESIGN.md §9).
 """
 
 from repro.workloads.scenario import (SCENARIOS, Scenario, ScenarioRunner,
-                                      run_scenario)
+                                      frontend_models, run_scenario,
+                                      trace_meta)
 from repro.workloads.traces import (bursty_trace, diurnal_trace,
                                     flash_crowd_trace, poisson_trace,
                                     query_trace)
 
 __all__ = [
     "SCENARIOS", "Scenario", "ScenarioRunner", "run_scenario",
+    "frontend_models", "trace_meta",
     "poisson_trace", "bursty_trace", "diurnal_trace", "flash_crowd_trace",
     "query_trace",
 ]

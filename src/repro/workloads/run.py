@@ -38,8 +38,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="override the mean arrival rate (qps)")
     p.add_argument("--replicas", type=int, default=None,
                    help="override replicas per model (frontend stack)")
-    p.add_argument("--out", default=None,
-                   help="write the JSON report here instead of stdout")
+    p.add_argument("--report-out", "--out", dest="out", default=None,
+                   help="write the JSON report here instead of stdout "
+                        "(--out kept as an alias; --report-out is the flag "
+                        "shared with python -m repro.cluster.run)")
     return p
 
 

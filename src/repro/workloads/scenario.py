@@ -89,7 +89,17 @@ SCENARIOS: Dict[str, Scenario] = {
 }
 
 
-def _frontend_models(scenario: Scenario):
+def trace_meta(scenario: Scenario) -> Dict[str, Any]:
+    """Provenance block for the ``repro.metrics/v1`` report: the trace seed
+    and generator that produced the run, so an archived report is
+    reproducible without the invoking command line."""
+    return {
+        "trace_seed": scenario.seed,
+        "trace_generator": f"{scenario.kind}_trace",
+    }
+
+
+def frontend_models(scenario: Scenario):
     """Deterministic numpy ensemble of graded quality + latency profiles.
     Model i is a fixed linear scorer; its latency model is seeded from
     (scenario.seed, i) so the whole run is a function of the scenario."""
@@ -125,7 +135,7 @@ class ScenarioRunner:
     # -- frontend (discrete-event Clipper) ------------------------------
     def run_frontend(self) -> Dict[str, Any]:
         s = self.scenario
-        models, lat = _frontend_models(s)
+        models, lat = frontend_models(s)
         clip = make_clipper(models, "exp4", slo=s.slo,
                             replicas=s.replicas, latency_models=lat,
                             batch_delay=s.batch_delay, seed=s.seed)
@@ -135,10 +145,11 @@ class ScenarioRunner:
         return clip.report()
 
     # -- lmserver (continuous batching) ---------------------------------
-    def run_lmserver(self) -> Dict[str, Any]:
-        """Calibrated simulation: a tiny real model decodes for real, but
-        service times come from a seeded latency model through a virtual
-        clock — deterministic end to end."""
+    def build_lmserver(self, *, admission=None):
+        """Construct the calibrated-simulation LMServer for this scenario.
+        Returns ``(srv, clock, params, pending)`` where ``pending`` is the
+        arrival list ``[(time, prompt)]`` — the control-plane driver reuses
+        this to run the same stack with admission control in front."""
         import jax
 
         from repro.configs.registry import ARCHITECTURES, reduced_config
@@ -164,7 +175,7 @@ class ScenarioRunner:
         srv = LMServer(model, mesh, rules, slots=s.slots, max_len=64,
                        slo=s.slo, temperature=0.0, seed=s.seed,
                        clock=clock, service_model=service_model,
-                       model_id=cfg.name)
+                       model_id=cfg.name, admission_control=admission)
         rng = np.random.default_rng(s.seed)
         # open-loop arrivals, thinned to a fixed request count so CLI runs
         # stay cheap; the arrival *process* is the scenario's
@@ -174,6 +185,14 @@ class ScenarioRunner:
         pending: List[Tuple[float, np.ndarray]] = [
             (float(t), rng.integers(0, cfg.vocab_size, size=s.prompt_len))
             for t in times]
+        return srv, clock, params, pending
+
+    def run_lmserver(self, *, admission=None) -> Dict[str, Any]:
+        """Calibrated simulation: a tiny real model decodes for real, but
+        service times come from a seeded latency model through a virtual
+        clock — deterministic end to end."""
+        s = self.scenario
+        srv, clock, params, pending = self.build_lmserver(admission=admission)
         i = 0
         while i < len(pending) or srv.pending:
             # release arrivals up to the virtual now
@@ -196,6 +215,7 @@ class ScenarioRunner:
         else:
             raise ValueError(f"unknown stack: {stack}")
         rep["scenario"] = dataclasses.asdict(self.scenario)
+        rep["meta"] = trace_meta(self.scenario)
         return rep
 
     def run_json(self, stack: str = "frontend") -> str:

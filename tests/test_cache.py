@@ -61,6 +61,61 @@ def test_digest_array_content():
     assert digest(a) != digest(c)
 
 
+def test_digest_scalar_types_do_not_collide():
+    """1, 1.0 and True hash identically in Python; the digest must keep
+    their types apart or they alias as cache keys."""
+    keys = {digest(1), digest(1.0), digest(True)}
+    assert len(keys) == 3
+    assert digest("1") not in keys
+    assert digest(0) != digest(False)
+
+
+def test_digest_container_types_do_not_collide():
+    assert digest([1, 2]) != digest((1, 2))
+    assert digest([1, 2]) == digest([1, 2])
+    # nested leaves keep their types too
+    assert digest((1,)) != digest((1.0,))
+
+
+def test_clock_eviction_when_every_ref_bit_set():
+    """Full-wrap sweep: with every resident entry referenced, the hand must
+    clear all bits in one lap and evict at its original position."""
+    c = ClockCache(3)
+    for k in ("a", "b", "c"):
+        c.put(k, k)
+    assert c._hand == 0                       # wrapped during the fill
+    for k in ("a", "b", "c"):
+        assert c.request(k) is True           # every ref bit set
+    c.put("d", 4)
+    # the sweep cleared a, b, c and evicted the slot the hand started on
+    assert "a" not in c and "d" in c
+    assert "b" in c and "c" in c
+    assert c.evictions == 1
+    assert c._hand == 1                       # advanced past the victim
+    assert not c._ref.any()                   # one full lap cleared all bits
+
+
+def test_clock_reinsert_evicted_key_counters_and_hand():
+    c = ClockCache(3)
+    for k in ("a", "b", "c"):
+        c.put(k, k)
+    for k in ("a", "b", "c"):
+        c.request(k)
+    c.put("d", 4)                             # evicts 'a' (wraparound above)
+    hits, misses = c.hits, c.misses
+    assert c.request("a") is False            # evicted: a genuine miss
+    assert c.misses == misses + 1 and c.hits == hits
+    c.put("a", 10)                            # re-insert the evicted key
+    # all bits were cleared by the wrap sweep, so the victim is the entry
+    # under the hand ('b' in slot 1); 'a' lands there unreferenced
+    assert c.fetch("a") == 10
+    assert "b" not in c and "c" in c and "d" in c
+    assert c.evictions == 2
+    assert c._hand == 2
+    assert c.request("a") is True             # present again: a hit
+    assert c.hits == hits + 1
+
+
 @given(st.lists(st.tuples(st.integers(0, 30), st.integers(0, 100)),
                 min_size=1, max_size=200),
        st.integers(1, 8))

@@ -142,9 +142,11 @@ def test_report_schema_and_cache_rates():
     assert rep["per_model"]["m0"]["batch_size"]["count"] == 1
     # canonical top-level keys — the cross-stack contract
     assert set(rep) == {"schema", "stack", "duration_s", "queries",
-                        "throughput_qps", "latency_s", "slo", "cache",
-                        "batch_size", "queue_depth", "stragglers",
+                        "throughput_qps", "latency_s", "slo", "admission",
+                        "cache", "batch_size", "queue_depth", "stragglers",
                         "per_model"}
+    assert set(rep["slo"]) == {"target_s", "violations", "rate", "attainment"}
+    assert set(rep["admission"]) == {"shed", "degraded", "shed_rate"}
 
 
 def test_report_json_stable():
