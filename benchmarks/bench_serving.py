@@ -1,0 +1,150 @@
+"""Serving hot-path benchmark: fused device-resident engine vs the
+reference per-slot loop (DESIGN.md §11).
+
+Replays one seeded mixed-prompt-length trace through both engines in two
+modes and emits ``BENCH_serving.json`` — the perf trajectory future PRs
+compare against:
+
+* ``sim``  — calibrated simulation (virtual clock + seeded service model):
+  byte-identical numbers from a seed, the mode CI runs;
+* ``wall`` — real wall-clock on this host (includes XLA compile cold
+  starts, like production first-dispatch).
+
+The headline columns are the hot-path contracts, not raw speed:
+``host_syncs_per_decode_step`` (fused: 1.0, reference: 1 + active slots)
+and ``prefill_compiles`` (fused: bounded by the batch×length bucket
+ladders; reference: one per distinct (batch, prompt-length) pair).
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --mode both \
+        --out BENCH_serving.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def _build(seed: int):
+    from repro.configs.registry import ARCHITECTURES, reduced_config
+    from repro.distributed.sharding import serve_rules
+    from repro.launch.mesh import compat_make_mesh
+    from repro.models.api import build_model
+
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
+    rules = serve_rules(False)
+    cfg = reduced_config(ARCHITECTURES["smollm-360m"])
+    model = build_model(cfg, mesh, rules)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, mesh, rules, model, params
+
+
+def _prompts(cfg, args):
+    rng = np.random.default_rng(args.seed)
+    lens = rng.integers(args.min_len, args.max_len_prompt + 1,
+                        size=args.requests)
+    return [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens], lens
+
+
+def run_engine(fused: bool, mode: str, args, built, prompts) -> dict:
+    from repro.core.metrics import VirtualClock
+    from repro.serving.engine import LMServer
+
+    cfg, mesh, rules, model, params = built
+    kw = dict(slots=args.slots, max_len=64, slo=0.5, temperature=0.0,
+              seed=args.seed, fused=fused, model_id=cfg.name)
+    if mode == "sim":
+        clock = VirtualClock()
+
+        def service_model(kind, batch, tokens):
+            if kind == "prefill":
+                return 0.004 + 5e-5 * batch * tokens
+            return 0.001 + 5e-5 * batch
+
+        kw.update(clock=clock, service_model=service_model)
+    t0 = time.perf_counter()
+    srv = LMServer(model, mesh, rules, **kw)
+    for p in prompts:
+        srv.submit(p, max_new_tokens=args.max_new)
+    srv.run(params)
+    wall = time.perf_counter() - t0
+    duration = srv.metrics.duration if mode == "sim" else wall
+    tokens = sum(len(r.tokens) for r in srv.completed.values())
+    st = srv.stats
+    return {
+        "engine": "fused" if fused else "reference",
+        "completed": st["completed"],
+        "generated_tokens": tokens,
+        "duration_s": duration,
+        "tokens_per_s": tokens / duration if duration else 0.0,
+        "decode_steps": st["decode_steps"],
+        "steps_per_s": (st["decode_steps"] / duration) if duration else 0.0,
+        "host_syncs_per_decode_step": st["host_syncs_per_decode_step"],
+        "prefill_compiles": st["prefill_compiles"],
+        "prefill_dispatches": st["prefill_dispatches"],
+        "pad_prompts": srv.pad_prompts,
+        "length_ladder": list(srv.length_ladder),
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", choices=("sim", "wall", "both"), default="sim")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--min-len", type=int, default=4)
+    ap.add_argument("--max-len-prompt", type=int, default=28)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
+                    help="decode-attention backend (pallas runs the kernel, "
+                         "in interpret mode off-TPU)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+
+    from repro.models.common import set_attention_backend
+
+    prev = set_attention_backend(args.backend)
+    try:
+        built = _build(args.seed)
+        cfg = built[0]
+        prompts, lens = _prompts(cfg, args)     # one trace for every run
+        modes = ("sim", "wall") if args.mode == "both" else (args.mode,)
+        report = {
+            "schema": "repro.bench_serving/v1",
+            "workload": {
+                "arch": cfg.name,
+                "requests": args.requests,
+                "max_new_tokens": args.max_new,
+                "slots": args.slots,
+                "distinct_prompt_lengths": int(len(set(map(int, lens)))),
+                "seed": args.seed,
+                "backend": args.backend,
+            },
+            "modes": {m: {e["engine"]: e for e in
+                          (run_engine(True, m, args, built, prompts),
+                           run_engine(False, m, args, built, prompts))}
+                      for m in modes},
+        }
+    finally:
+        set_attention_backend(prev)
+    with open(args.out, "w") as f:
+        json.dump(report, f, sort_keys=True, indent=2)
+        f.write("\n")
+    for m, row in report["modes"].items():
+        fu, re_ = row["fused"], row["reference"]
+        print(f"[{m}] fused:     {fu['tokens_per_s']:.1f} tok/s, "
+              f"{fu['host_syncs_per_decode_step']:.2f} syncs/step, "
+              f"{fu['prefill_compiles']} prefill compiles")
+        print(f"[{m}] reference: {re_['tokens_per_s']:.1f} tok/s, "
+              f"{re_['host_syncs_per_decode_step']:.2f} syncs/step, "
+              f"{re_['prefill_compiles']} prefill compiles")
+    return report
+
+
+if __name__ == "__main__":
+    main()

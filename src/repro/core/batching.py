@@ -15,6 +15,7 @@
 
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, List, Optional, Sequence, Tuple
@@ -126,7 +127,13 @@ class FixedController:
 
 def bucket(n: int, *, ladder: Sequence[int] = (), cap: int = 4096) -> int:
     """Smallest ladder size >= n (default: powers of two up to cap; above
-    the cap the exact size is returned — no padding, no recompile guard)."""
+    the cap the exact size is returned — no padding, no recompile guard).
+
+    The same function pads both dispatched *batch sizes* and — via an
+    explicit ``ladder`` from :func:`prompt_length_ladder` — prompt
+    *lengths*, so distinct compiled prefill shapes are bounded by
+    ``len(batch rungs) * len(length rungs)`` instead of by the number of
+    distinct (count, length) pairs in the workload."""
     if ladder:
         for b in ladder:
             if b >= n:
@@ -136,6 +143,22 @@ def bucket(n: int, *, ladder: Sequence[int] = (), cap: int = 4096) -> int:
     while b < n and b < cap:
         b <<= 1
     return max(b, n) if n > cap else b
+
+
+def prompt_length_ladder(cap: int, *, lo: int = 8,
+                         factor: float = 2.0) -> Tuple[int, ...]:
+    """Geometric prompt-length rungs ``lo, lo*factor, ...`` capped at
+    ``cap`` (the cap itself is always the last rung, so every prompt that
+    fits the cap pads to a rung). ``len(result)`` bounds the number of
+    distinct prefill sequence lengths the engine can compile."""
+    assert cap >= 1 and lo >= 1 and factor > 1.0
+    rungs: List[int] = []
+    v = min(lo, cap)
+    while v < cap:
+        rungs.append(int(v))
+        v = max(int(v) + 1, int(math.ceil(v * factor)))
+    rungs.append(int(cap))
+    return tuple(rungs)
 
 
 # ---------------------------------------------------------------------------

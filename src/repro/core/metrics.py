@@ -204,8 +204,14 @@ class MetricsRegistry:
 
         Deadline-finalized queries land *exactly* on the SLO (straggler
         mitigation, paper §5.2.2) — the epsilon keeps float noise in
-        ``arrival + slo - arrival`` from miscounting them as violations."""
-        self.observe(LATENCY, latency, model=model)
+        ``arrival + slo - arrival`` from miscounting them as violations.
+
+        With a ``model`` label the observation lands in *both* the global
+        and the labeled latency histogram (like the violation counters), so
+        per-model tagging never starves the cross-stack global series."""
+        self.observe(LATENCY, latency)
+        if model is not None:
+            self.observe(LATENCY, latency, model=model)
         if self.slo is not None and latency - self.slo > 1e-12:
             self.inc(SLO_VIOLATIONS)
             if model is not None:
@@ -292,6 +298,13 @@ class MetricsRegistry:
             "per_model": {
                 m: {
                     "queries": self.counter(QUERIES_SUBMITTED, model=m),
+                    # completions + end-to-end latency are tagged per model
+                    # (LMServer does; the ensemble frontend completes
+                    # queries across models, so these stay 0/empty there) —
+                    # multi-model cluster reports can now separate LM
+                    # completions from frontend ones
+                    "completed": self.counter(QUERIES_COMPLETED, model=m),
+                    "latency_s": self._hist_summary(LATENCY, model=m),
                     "batches": self.counter(BATCHES, model=m),
                     "service_s": self._hist_summary(SERVICE, model=m),
                     "batch_size": self._hist_summary(BATCH_SIZE, model=m),

@@ -4,7 +4,12 @@ The decode hot loop is memory-bound: one query token must stream the whole
 (per-sample) KV cache from HBM once. Grid (B, Hkv, nK): all G query heads
 sharing a kv head are processed together as a [G, D] block so each K/V tile
 is read exactly once per kv head (the GQA bandwidth win). Per-sample valid
-lengths arrive via scalar prefetch (SMEM) and mask the tail tile."""
+lengths arrive via scalar prefetch (SMEM) and mask the tail tile.
+
+The kernel consumes the caches in the *model layout* ``[B, Smax, Hkv, D]``
+directly — the BlockSpec index maps slice ``(1, k_blk, 1, D)`` tiles
+straight out of the cache, so no host-side ``swapaxes`` relayout copy is
+paid per call (the serving engine calls this every decode step)."""
 
 from __future__ import annotations
 
@@ -40,7 +45,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     @pl.when(live)
     def _update():
         q = q_ref[0, 0].astype(jnp.float32) * scale        # [G, D]
-        k = k_ref[0, 0].astype(jnp.float32)                # [k_blk, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)             # [k_blk, D]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # [G, kb]
         cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -53,7 +58,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         corr = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new[:, None])
         l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
-        v = v_ref[0, 0].astype(jnp.float32)                # [k_blk, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)             # [k_blk, D]
         acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
         m_ref[...] = m_new
 
@@ -65,10 +70,10 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
                      k_blk: int = 256, scale=None, interpret: bool = False):
-    """q: [B, Hq, D]; k/v_cache: [B, Hkv, Smax, D]; lengths: [B] ->
-    [B, Hq, D]."""
+    """q: [B, Hq, D]; k/v_cache: [B, Smax, Hkv, D] (model layout); lengths:
+    [B] -> [B, Hq, D]."""
     B, Hq, D = q.shape
-    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     k_blk = min(k_blk, Smax)
     assert Smax % k_blk == 0
@@ -84,8 +89,10 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
         grid=(B, Hkv, nk),
         in_specs=[
             pl.BlockSpec((1, 1, G, D), lambda b, h, ki, lens: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, k_blk, D), lambda b, h, ki, lens: (b, h, ki, 0)),
-            pl.BlockSpec((1, 1, k_blk, D), lambda b, h, ki, lens: (b, h, ki, 0)),
+            pl.BlockSpec((1, k_blk, 1, D),
+                         lambda b, h, ki, lens: (b, ki, h, 0)),
+            pl.BlockSpec((1, k_blk, 1, D),
+                         lambda b, h, ki, lens: (b, ki, h, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki, lens: (b, h, 0, 0)),
         scratch_shapes=[
@@ -99,6 +106,5 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
         interpret=interpret,
-    )(lengths, qg, k_cache.reshape(B, Hkv, Smax, D),
-      v_cache.reshape(B, Hkv, Smax, D))
+    )(lengths, qg, k_cache, v_cache)
     return out.reshape(B, Hq, D)

@@ -1,11 +1,14 @@
-"""Jitted public wrapper for the decode attention kernel (model layout)."""
+"""Jitted public wrapper for the decode attention kernel (model layout).
+
+The kernel consumes ``[B, Smax, Hkv, D]`` caches directly, so this wrapper
+is copy-free: no per-call ``swapaxes`` relayout of the (large) KV cache —
+only the (tiny) query is reshaped, which XLA folds into the kernel call."""
 
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import decode_attention
 
@@ -15,8 +18,6 @@ def decode_attention_op(q, k_cache, v_cache, lengths, *, window: int = 0,
                         k_blk: int = 256, interpret: bool = False):
     """q: [B, 1, Hq, D]; k/v_cache: [B, Smax, Hkv, D]; lengths: [B] ->
     [B, 1, Hq, D] (matches repro.models.common.attention_decode)."""
-    B, _, Hq, D = q.shape
-    o = decode_attention(q[:, 0], jnp.swapaxes(k_cache, 1, 2),
-                         jnp.swapaxes(v_cache, 1, 2), lengths,
+    o = decode_attention(q[:, 0], k_cache, v_cache, lengths,
                          window=window, k_blk=k_blk, interpret=interpret)
     return o[:, None]

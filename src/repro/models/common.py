@@ -11,13 +11,19 @@ Three attention implementations (DESIGN.md §5):
   per-sample lengths.
 
 The Pallas kernels in ``repro.kernels`` are the TPU-target hot-path versions
-of the latter two, validated against these (and ``ref.py``) oracles.
+of the latter two, validated against these (and ``ref.py``) oracles. The
+serving hot path picks between them through the **attention backend switch**
+(:func:`set_attention_backend` / :func:`attention_decode_auto`): when the
+backend is ``"pallas"`` and the shapes permit, single-token decode attention
+dispatches to the Pallas kernel; otherwise the jnp path below serves as the
+fallback (and as the parity oracle — see tests/test_serving_fused.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -145,7 +151,7 @@ def attention_train(q, k, v, *, causal: bool = True, window=0,
 def attention_prefill(q, k, v, *, causal: bool = True, window=0,
                       q_block: int = 512, k_block: int = 1024,
                       scale: Optional[float] = None,
-                      q_offset=None) -> jax.Array:
+                      q_offset=None, kv_valid=None) -> jax.Array:
     """Blocked online-softmax attention with causal/window block skipping.
 
     Forward-only (uses fori_loop with data-dependent trip counts). Never
@@ -154,6 +160,13 @@ def attention_prefill(q, k, v, *, causal: bool = True, window=0,
     q_offset: absolute position of q row 0 (may be traced — used by the
     context-parallel path where each shard holds a sequence slice). Defaults
     to suffix alignment (Sk - Sq).
+
+    kv_valid: optional per-sample valid key length [B] — keys at positions
+    >= kv_valid[b] are masked out. Used by bucket-padded prefill (the
+    serving length ladder) so right-pad junk tokens never contribute
+    attention mass; under causal masking real rows already never see the
+    later junk keys, so this additionally cleans the junk rows themselves
+    and covers the non-causal (encoder) case.
     """
     B, Sq, Hq, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
@@ -191,7 +204,11 @@ def attention_prefill(q, k, v, *, causal: bool = True, window=0,
             mask = (k_pos > q_pos - w)
             if causal:
                 mask &= k_pos <= q_pos
-            s = jnp.where(mask, s, -1e30)
+            full_mask = mask[None, None, None, :, :]
+            if kv_valid is not None:
+                vm = k_pos[0] < kv_valid[:, None]          # [B, kb]
+                full_mask = full_mask & vm[:, None, None, None, :]
+            s = jnp.where(full_mask, s, -1e30)
             m_new = jnp.maximum(m, s.max(axis=-1))
             corr = jnp.exp(m - m_new)
             p = jnp.exp(s - m_new[..., None])
@@ -228,8 +245,75 @@ def attention_decode(q, k_cache, v_cache, lengths, *, window=0,
     valid = (k_pos < lengths[:, None]) & (k_pos >= lengths[:, None] - w)
     s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    # rows with zero valid keys (lengths == 0) attend to nothing, not to a
+    # uniform smear over the mask floor — keeps jnp/Pallas parity exact
+    p = jnp.where(valid.any(-1)[:, None, None, None], p, 0.0)
     o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
     return o.reshape(B, 1, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# attention kernel backend switch (serving hot path)
+# ---------------------------------------------------------------------------
+
+_BACKENDS = ("jnp", "pallas")
+_backend = os.environ.get("REPRO_ATTENTION_BACKEND", "jnp")
+
+
+def set_attention_backend(name: str) -> str:
+    """Select the decode-attention implementation (``"jnp"`` | ``"pallas"``)
+    and return the previous choice. Read at *trace* time: set it before the
+    first call of any jitted step that should use it (the serving engine
+    traces its decode step on first dispatch). ``REPRO_ATTENTION_BACKEND``
+    seeds the initial value."""
+    global _backend
+    if name not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}: {name!r}")
+    prev = _backend
+    _backend = name
+    return prev
+
+
+def get_attention_backend() -> str:
+    return _backend
+
+
+def _pow2_divisor(n: int) -> int:
+    return n & -n if n > 0 else 0
+
+
+def pallas_decode_viable(q_shape, kv_shape, window) -> bool:
+    """Static shape gate for Pallas decode-attention dispatch: single query
+    token, grouped heads, and a cache length with a usable power-of-two
+    k-block tile. ``window`` must be a Python int (per-layer traced windows
+    fall back to jnp)."""
+    if not isinstance(window, int):
+        return False
+    B, one, Hq, D = q_shape
+    Smax, Hkv = kv_shape[1], kv_shape[2]
+    if one != 1 or Hkv == 0 or Hq % Hkv:
+        return False
+    return _pow2_divisor(Smax) >= 8
+
+
+def attention_decode_auto(q, k_cache, v_cache, lengths, *, window=0,
+                          scale: Optional[float] = None) -> jax.Array:
+    """Backend-dispatched single-token decode attention (model layout:
+    q [B,1,Hq,D]; k/v_cache [B,Smax,Hkv,D]; lengths [B]).
+
+    Routes to the Pallas kernel when the backend is ``"pallas"`` and the
+    static shapes permit; otherwise (or on shape mismatch) falls back to the
+    jnp oracle. Off-TPU the kernel runs in interpret mode, so parity tests
+    exercise the same dispatch path CI uses."""
+    if (_backend == "pallas" and scale is None
+            and pallas_decode_viable(q.shape, k_cache.shape, window)):
+        from repro.kernels.decode_attention.ops import decode_attention_op
+        k_blk = min(256, _pow2_divisor(k_cache.shape[1]))
+        return decode_attention_op(
+            q, k_cache, v_cache, lengths, window=window, k_blk=k_blk,
+            interpret=jax.default_backend() != "tpu")
+    return attention_decode(q, k_cache, v_cache, lengths, window=window,
+                            scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +384,16 @@ def lm_head(p, x, norm_eps: float):
     return shard(logits, "batch", None, "vocab")
 
 
+def last_valid_slice(x: jax.Array, lengths: jax.Array) -> jax.Array:
+    """x: [B,S,d]; lengths: [B] -> [B,1,d], row ``lengths[b]-1`` per sample.
+
+    The bucket-padded prefill path right-pads prompts, so "the last token"
+    is per-sample, not position S-1."""
+    B, S, d = x.shape
+    idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, S - 1)[:, None, None]
+    return jnp.take_along_axis(x, jnp.broadcast_to(idx, (B, 1, d)), axis=1)
+
+
 def chunked_loss(p, x, labels, norm_eps: float, chunk: int = 512) -> jax.Array:
     """Cross-entropy over the vocab, chunked over sequence so full [B,S,V]
     logits are never materialized. x: [B,S,d], labels: [B,S]."""
@@ -355,4 +449,5 @@ def attention_decode_ring(q, k_cache, v_cache, lengths, *,
     lengths: [B] tokens seen BEFORE this one (current was just written)."""
     W = k_cache.shape[1]
     count = jnp.minimum(lengths + 1, W)
-    return attention_decode(q, k_cache, v_cache, count, window=0, scale=scale)
+    return attention_decode_auto(q, k_cache, v_cache, count, window=0,
+                                 scale=scale)

@@ -18,10 +18,10 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard
 from repro.models.api import Model
 from repro.models.common import (
-    Spec, attn_qkv, attn_specs, attention_decode, attention_prefill,
+    Spec, attn_qkv, attn_specs, attention_decode_auto, attention_prefill,
     attention_train, axes_tree, cache_update, chunked_loss, embed_specs,
-    embed_tokens, glu_apply, glu_specs, init_tree, lm_head, rmsnorm, rope,
-    stacked, DEFAULT_DTYPE,
+    embed_tokens, glu_apply, glu_specs, init_tree, last_valid_slice, lm_head,
+    rmsnorm, rope, stacked, DEFAULT_DTYPE,
 )
 
 
@@ -93,7 +93,7 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         v = shard(v, "batch", None, "kv_heads", None)
         return k, v
 
-    def _dec_layer_seq(x, lp, memory, train: bool):
+    def _dec_layer_seq(x, lp, memory, train: bool, vl=None):
         B, S, _ = x.shape
         h = rmsnorm(x, lp["ln1"], eps)
         q, k, v = attn_qkv(lp["self"], h, nq, nkv, hd)
@@ -103,7 +103,8 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
             o = attention_train(q, k, v, causal=True)
         else:
             o = attention_prefill(q, k, v, causal=True,
-                                  q_block=min(q_block, S), k_block=min(k_block, S))
+                                  q_block=min(q_block, S),
+                                  k_block=min(k_block, S), kv_valid=vl)
         x = x + shard(o.reshape(B, S, nq * hd) @ lp["self"]["wo"],
                       "batch", None, "embed")
         # cross attention
@@ -143,9 +144,10 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         x = embed_tokens(params["embed"], batch["tokens"])
         B, S, _ = x.shape
         Smax = max_len or S
+        vl = batch.get("lengths")       # per-sample valid decoder-token count
 
         def body(x, lp):
-            x, (k, v) = _dec_layer_seq(x, lp, memory, train=False)
+            x, (k, v) = _dec_layer_seq(x, lp, memory, train=False, vl=vl)
             ck, cv = _cross_kv(lp, memory)
             if Smax > S:
                 pad = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
@@ -153,9 +155,11 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
             return x, (k, v, ck, cv)
 
         x, (ks, vs, cks, cvs) = lax.scan(body, x, params["dec"])
-        logits = lm_head(params["embed"], x[:, -1:, :], eps)[:, 0]
-        cache = {"k": ks, "v": vs, "ck": cks, "cv": cvs,
-                 "lengths": jnp.full((B,), S, jnp.int32)}
+        x_last = x[:, -1:, :] if vl is None else last_valid_slice(x, vl)
+        logits = lm_head(params["embed"], x_last, eps)[:, 0]
+        lengths = (jnp.full((B,), S, jnp.int32) if vl is None
+                   else vl.astype(jnp.int32))
+        cache = {"k": ks, "v": vs, "ck": cks, "cv": cvs, "lengths": lengths}
         return logits, cache
 
     def decode_step(params, cache, tokens, lengths):
@@ -169,7 +173,7 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
             q = rope(q, lengths[:, None], cfg.rope_theta)
             k = rope(k, lengths[:, None], cfg.rope_theta)
             k_l, v_l = cache_update(k_l, v_l, k, v, lengths)
-            o = attention_decode(q, k_l, v_l, lengths + 1)
+            o = attention_decode_auto(q, k_l, v_l, lengths + 1)
             x = x + shard(o.reshape(B, 1, nq * hd) @ lp["self"]["wo"],
                           "batch", None, "embed")
             h = rmsnorm(x, lp["ln_x"], eps)
@@ -178,7 +182,7 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
                 qx = qx + lp["cross"]["bq"].reshape(nq, hd)
             S_enc = ck_l.shape[1]
             enc_len = jnp.full((B,), S_enc, jnp.int32)
-            ox = attention_decode(qx, ck_l, cv_l, enc_len)
+            ox = attention_decode_auto(qx, ck_l, cv_l, enc_len)
             x = x + shard(ox.reshape(B, 1, nq * hd) @ lp["cross"]["wo"],
                           "batch", None, "embed")
             x = x + shard(glu_apply(lp["ffn"], rmsnorm(x, lp["ln2"], eps)),
@@ -193,9 +197,13 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
                         "lengths": lengths + 1}
 
     def init_cache(batch: int, max_len: int, enc_len: int = 0):
-        kv = jnp.zeros((L, batch, max_len, nkv, hd), DEFAULT_DTYPE)
-        ckv = jnp.zeros((L, batch, enc_len or max_len, nkv, hd), DEFAULT_DTYPE)
-        return {"k": kv, "v": kv, "ck": ckv, "cv": ckv,
+        # distinct buffers per leaf (donation-safe — see transformer)
+        kv = (L, batch, max_len, nkv, hd)
+        ckv = (L, batch, enc_len or max_len, nkv, hd)
+        return {"k": jnp.zeros(kv, DEFAULT_DTYPE),
+                "v": jnp.zeros(kv, DEFAULT_DTYPE),
+                "ck": jnp.zeros(ckv, DEFAULT_DTYPE),
+                "cv": jnp.zeros(ckv, DEFAULT_DTYPE),
                 "lengths": jnp.zeros((batch,), jnp.int32)}
 
     def cache_axes(batch: int, max_len: int, enc_len: int = 0):
@@ -211,5 +219,5 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         decode_step=decode_step,
         init_cache=init_cache,
         cache_axes=cache_axes,
-        extras={"padded": pd},
+        extras={"padded": pd, "prompt_pad": True},
     )

@@ -25,13 +25,14 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard
 from repro.models.api import Model
 from repro.models.common import (
-    Spec, attn_qkv, attn_specs, attention_decode, attention_decode_ring,
+    Spec, attn_qkv, attn_specs, attention_decode_auto, attention_decode_ring,
     attention_prefill, attention_train, axes_tree, cache_update,
     chunked_loss, embed_specs, embed_tokens, glu_apply, glu_specs, init_tree,
-    lm_head, ring_cache_update, rmsnorm, rope, stacked, DEFAULT_DTYPE,
+    last_valid_slice, lm_head, ring_cache_update, rmsnorm, rope, stacked,
+    DEFAULT_DTYPE,
 )
 from repro.models.linear_core import (
-    chunked_linear_attention, linear_attention_step,
+    chunked_linear_attention, linear_attention_step, pad_mask_gates,
 )
 
 
@@ -49,17 +50,27 @@ def _ssd_specs(d: int, nh: int, hd: int, ds: int, conv_w: int) -> Dict[str, Spec
     }
 
 
-def _causal_conv(x, kern, state=None):
+def _causal_conv(x, kern, state=None, vl=None):
     """Depthwise causal conv via shifts. x: [B,S,C]; kern: [W,C];
-    state: [B,W-1,C] trailing inputs from the previous segment."""
+    state: [B,W-1,C] trailing inputs from the previous segment.
+
+    vl: per-sample valid length of a right-padded x — the carried state is
+    then the last W-1 *valid* inputs per sample (row t of x lives at row
+    t + W-1 of the padded buffer), not the junk tail."""
+    B, S, C = x.shape
     W = kern.shape[0]
     if state is None:
-        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+        pad = jnp.zeros((B, W - 1, C), x.dtype)
     else:
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)
-    y = sum(xp[:, j:j + x.shape[1]] * kern[j] for j in range(W))
-    new_state = xp[:, -(W - 1):]
+    y = sum(xp[:, j:j + S] * kern[j] for j in range(W))
+    if vl is None or W == 1:
+        new_state = xp[:, -(W - 1):] if W > 1 else xp[:, :0]
+    else:
+        idx = vl[:, None] + jnp.arange(W - 1)[None, :]      # xp rows of the
+        idx = jnp.broadcast_to(idx[:, :, None], (B, W - 1, C))
+        new_state = jnp.take_along_axis(xp, idx, axis=1)    # last valid W-1
     return jax.nn.silu(y), new_state
 
 
@@ -71,7 +82,7 @@ def _ssd_gates(p, x):
     return -dt * A, jnp.log(dt)
 
 
-def _ssd_seq(p, x, state, chunk):
+def _ssd_seq(p, x, state, chunk, vl=None):
     """SSD branch over a sequence. state: (conv_state, S [B,nh,ds,hd])."""
     B, S, d = x.shape
     nh = p["w_dt"].shape[1]
@@ -81,11 +92,13 @@ def _ssd_seq(p, x, state, chunk):
     up = x @ p["w_in"]
     d_inner = nh * hd
     xin, z = up[..., :d_inner], up[..., d_inner:]
-    xin, conv_state = _causal_conv(xin, p["conv"], conv_state)
+    xin, conv_state = _causal_conv(xin, p["conv"], conv_state, vl=vl)
     bc = x @ p["w_bc"]
     b = bc[..., :nh * ds].reshape(B, S, nh, ds)
     c = bc[..., nh * ds:].reshape(B, S, nh, ds)
     log_f, log_i = _ssd_gates(p, x)
+    if vl is not None:
+        log_f, log_i = pad_mask_gates(log_f, log_i, vl)
     v = xin.reshape(B, S, nh, hd)
     y, Sm = chunked_linear_attention(c, b, v, log_f, log_i, chunk=chunk,
                                      initial_state=Sm)
@@ -154,7 +167,7 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         "swa": stacked(layer_specs, n_swa),        # sliding-window layers
     }
 
-    def _branches_seq(lp, x, window, ssd_state, train: bool):
+    def _branches_seq(lp, x, window, ssd_state, train: bool, vl=None):
         """One block over a sequence; returns (x, (k, v), ssd_state)."""
         B, S, _ = x.shape
         h = rmsnorm(x, lp["ln"], eps)
@@ -166,9 +179,10 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
             o = attention_train(q, k, v, causal=True, window=window)
         else:
             o = attention_prefill(q, k, v, causal=True, window=window,
-                                  q_block=q_block, k_block=k_block)
+                                  q_block=q_block, k_block=k_block,
+                                  kv_valid=vl)
         a_out = o.reshape(B, S, nq * hd) @ lp["attn"]["wo"]
-        s_out, ssd_state = _ssd_seq(lp["ssd"], h, ssd_state, chunk)
+        s_out, ssd_state = _ssd_seq(lp["ssd"], h, ssd_state, chunk, vl)
         mix = 0.5 * (rmsnorm(a_out, lp["ln_attn"], eps)
                      + rmsnorm(s_out, lp["ln_ssd"], eps))
         x = x + shard(mix, "batch", "seq", "embed")
@@ -187,7 +201,7 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
             o = attention_decode_ring(q, k_l, v_l, lengths)
         else:
             k_l, v_l = cache_update(k_l, v_l, k, v, lengths)
-            o = attention_decode(q, k_l, v_l, lengths + 1)
+            o = attention_decode_auto(q, k_l, v_l, lengths + 1)
         a_out = o.reshape(B, 1, nq * hd) @ lp["attn"]["wo"]
         s_out, ssd_state = _ssd_step(lp["ssd"], h, ssd_state)
         mix = 0.5 * (rmsnorm(a_out, lp["ln_attn"], eps)
@@ -209,8 +223,14 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
 
     # ---------------- train / prefill driver ----------------
     def _run_seq(params, x, train: bool, collect_cache: bool,
-                 Smax: int = 0):
+                 Smax: int = 0, vl=None):
         B, S, _ = x.shape
+        # padded prefill requires the no-wrap ring branch: junk tail slots
+        # [vl, S) are exactly the ones decode overwrites before its valid
+        # count reaches them. A wrapped ring (S > W) would alias junk onto
+        # live slots — the engine caps the length ladder at W (extras
+        # ``prompt_pad_cap``) so this cannot be reached from serving.
+        assert vl is None or W >= S, "padded prefill needs prompt bucket <= window"
         caches_g: List[Any] = []
         states_g: List[Any] = []
         caches_w: List[Any] = []
@@ -220,7 +240,8 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
 
         def swa_body(x, xs):
             lp, cs, sm = xs
-            x, (k, v), (cs, sm) = _branches_seq(lp, x, W, (cs, sm), train)
+            x, (k, v), (cs, sm) = _branches_seq(lp, x, W, (cs, sm), train,
+                                                vl)
             if collect_cache:
                 if W >= S:      # no wrap yet: positions p land at slots p
                     pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
@@ -239,7 +260,7 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         for gi in range(n_global):
             lp = _layer_at(params["g"], gi)
             x, (k, v), st = _branches_seq(
-                lp, x, 0, (conv_g0[gi], ssd_g0[gi]), train)
+                lp, x, 0, (conv_g0[gi], ssd_g0[gi]), train, vl)
             if collect_cache:
                 if Smax > S:
                     pad = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
@@ -266,9 +287,11 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         x = embed_tokens(params["embed"], batch["tokens"])
         B, S, _ = x.shape
         Smax = max_len or S
+        vl = batch.get("lengths")
         x, cg, sg, cw = _run_seq(params, x, train=False, collect_cache=True,
-                                 Smax=Smax)
-        logits = lm_head(params["embed"], x[:, -1:, :], eps)[:, 0]
+                                 Smax=Smax, vl=vl)
+        x_last = x[:, -1:, :] if vl is None else last_valid_slice(x, vl)
+        logits = lm_head(params["embed"], x_last, eps)[:, 0]
         cache = {
             "kg": jnp.stack([k for k, _ in cg]),
             "vg": jnp.stack([v for _, v in cg]),
@@ -278,7 +301,8 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
             "ssd_g": jnp.stack([st[1] for st in sg]),
             "conv_w": jnp.concatenate([y[2] for y in cw], axis=0),
             "ssd_w": jnp.concatenate([y[3] for y in cw], axis=0),
-            "lengths": jnp.full((B,), S, jnp.int32),
+            "lengths": (jnp.full((B,), S, jnp.int32) if vl is None
+                        else vl.astype(jnp.int32)),
         }
         return logits, cache
 
@@ -359,5 +383,9 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         decode_step=decode_step,
         init_cache=init_cache,
         cache_axes=cache_axes,
-        extras={"padded": pd, "segments": segs},
+        # prompt padding is exact here (masked SSD gates + per-sample conv
+        # state), but only while the padded bucket stays within the sliding
+        # window — beyond W the ring cache wraps junk onto live slots
+        extras={"padded": pd, "segments": segs,
+                "prompt_pad": True, "prompt_pad_cap": W},
     )

@@ -77,6 +77,16 @@ def chunked_linear_attention(q, k, v, log_f, log_i, *, chunk: int = 256,
     return y, state
 
 
+def pad_mask_gates(log_f, log_i, vl):
+    """Neutralize gates at right-pad junk positions (pos >= vl[b]): forget
+    gate 1 (log 0) and input gate 0 (log -inf), so the matrix-memory state
+    after a padded sequence equals the state after the unpadded prompt
+    exactly — junk steps contribute an exact 0 to every chunk sum.
+    log_f/log_i: [B,S,H]; vl: [B] valid lengths."""
+    ok = jnp.arange(log_f.shape[1])[None, :, None] < vl[:, None, None]
+    return jnp.where(ok, log_f, 0.0), jnp.where(ok, log_i, -1e30)
+
+
 def linear_attention_step(state, q, k, v, log_f, log_i):
     """One decode step. state [B,H,dk,dv]; q,k [B,H,dk]; v [B,H,dv];
     log_f/log_i [B,H]. Returns (y [B,H,dv], new_state)."""

@@ -20,10 +20,10 @@ from repro.distributed.sharding import compat_shard_map, shard
 from repro.models import moe as moe_lib
 from repro.models.api import Model
 from repro.models.common import (
-    Spec, attn_qkv, attn_specs, attention_decode, attention_prefill,
-    attention_train, axes_tree, cache_update, chunked_loss, embed_specs,
-    embed_tokens, glu_apply, glu_specs, init_tree, lm_head, rmsnorm, rope,
-    stacked, DEFAULT_DTYPE,
+    Spec, attn_qkv, attn_specs, attention_decode, attention_decode_auto,
+    attention_prefill, attention_train, axes_tree, cache_update, chunked_loss,
+    embed_specs, embed_tokens, glu_apply, glu_specs, init_tree,
+    last_valid_slice, lm_head, rmsnorm, rope, stacked, DEFAULT_DTYPE,
 )
 
 
@@ -40,12 +40,12 @@ def _layer_specs(cfg: ModelConfig, nq: int, nkv: int, hd: int) -> Dict[str, Any]
     return specs
 
 
-def _layer_windows(cfg: ModelConfig) -> jnp.ndarray:
-    """Per-layer window sizes (0 = full attention)."""
+def _layer_windows(cfg: ModelConfig) -> list:
+    """Per-layer window sizes (0 = full attention), as static Python ints."""
     w = [cfg.window] * cfg.num_layers
     for i in cfg.global_layers:
         w[i] = 0
-    return jnp.asarray(w, jnp.int32)
+    return w
 
 
 def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
@@ -67,7 +67,8 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         "embed": embed_specs(V, d),
         "layers": stacked(_layer_specs(cfg, nq, nkv, hd), L),
     }
-    windows = _layer_windows(cfg)
+    static_windows = _layer_windows(cfg)
+    windows = jnp.asarray(static_windows, jnp.int32)
 
     def _ffn(lp, h):
         if cfg.family == "moe":
@@ -150,6 +151,10 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         x = _embed_input(params, batch)
         B, S, _ = x.shape
         Smax = max_len or S
+        # per-sample valid prompt length (right-padded batch, serving length
+        # ladder). Causal masking already keeps real rows clean; kv_valid
+        # additionally zeroes the junk rows' attention mass.
+        vl = batch.get("lengths")
 
         def body(x, xs):
             lp, window = xs
@@ -172,7 +177,8 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
                 o = _cp_attention(q, k, v, window)
             else:
                 o = attention_prefill(q, k, v, causal=True, window=window,
-                                      q_block=q_block, k_block=k_block)
+                                      q_block=q_block, k_block=k_block,
+                                      kv_valid=vl)
             x = x + shard(o.reshape(B, S, nq * hd) @ attn_p["wo"],
                           "batch", "seq", "embed")
             h2 = rmsnorm(x, lp["ln2"], eps)
@@ -184,12 +190,20 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
             return x, (k, v)
 
         x, (ks, vs) = lax.scan(body, x, (params["layers"], windows))
-        logits = lm_head(params["embed"], x[:, -1:, :], eps)[:, 0]
-        cache = {"k": ks, "v": vs,
-                 "lengths": jnp.full((B,), S, jnp.int32)}
+        x_last = x[:, -1:, :] if vl is None else last_valid_slice(x, vl)
+        logits = lm_head(params["embed"], x_last, eps)[:, 0]
+        lengths = (jnp.full((B,), S, jnp.int32) if vl is None
+                   else vl.astype(jnp.int32))
+        cache = {"k": ks, "v": vs, "lengths": lengths}
         return logits, cache
 
     # ---------------- decode ----------------
+    # kernel-backend dispatch needs a static window; when every layer shares
+    # one window size (the common case — smollm/granite/qwen are all-global)
+    # the scanned per-layer window is bypassed with the static value
+    uniform_window = (static_windows[0]
+                      if len(set(static_windows)) == 1 else None)
+
     def decode_step(params, cache, tokens, lengths):
         """tokens: [B,1]; lengths: [B] current context length per sample."""
         x = embed_tokens(params["embed"], tokens)
@@ -202,7 +216,11 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
             q = rope(q, lengths[:, None], cfg.rope_theta)
             k = rope(k, lengths[:, None], cfg.rope_theta)
             k_l, v_l = cache_update(k_l, v_l, k, v, lengths)
-            o = attention_decode(q, k_l, v_l, lengths + 1, window=window)
+            if uniform_window is not None:
+                o = attention_decode_auto(q, k_l, v_l, lengths + 1,
+                                          window=uniform_window)
+            else:
+                o = attention_decode(q, k_l, v_l, lengths + 1, window=window)
             x = x + shard(o.reshape(B, 1, nq * hd) @ lp["attn"]["wo"],
                           "batch", None, "embed")
             h2 = rmsnorm(x, lp["ln2"], eps)
@@ -217,8 +235,11 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         return logits, new_cache
 
     def init_cache(batch: int, max_len: int):
-        kv = jnp.zeros((L, batch, max_len, nkv, hd), DEFAULT_DTYPE)
-        return {"k": kv, "v": kv,
+        # distinct buffers per leaf: the serving engine donates the cache
+        # into its jitted scatter/decode, and XLA rejects aliased donations
+        shape = (L, batch, max_len, nkv, hd)
+        return {"k": jnp.zeros(shape, DEFAULT_DTYPE),
+                "v": jnp.zeros(shape, DEFAULT_DTYPE),
                 "lengths": jnp.zeros((batch,), jnp.int32)}
 
     def cache_axes(batch: int, max_len: int):
@@ -237,7 +258,9 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         decode_step=decode_step,
         init_cache=init_cache,
         cache_axes=cache_axes,
-        extras={"padded": pd},
+        # moe excluded from prompt padding: junk tokens contend for expert
+        # capacity and can displace real tokens' expert assignments
+        extras={"padded": pd, "prompt_pad": cfg.family != "moe"},
     )
 
 

@@ -23,10 +23,10 @@ from repro.distributed.sharding import shard
 from repro.models.api import Model
 from repro.models.common import (
     Spec, axes_tree, chunked_loss, embed_specs, embed_tokens, init_tree,
-    lm_head, rmsnorm, stacked, DEFAULT_DTYPE,
+    last_valid_slice, lm_head, rmsnorm, stacked, DEFAULT_DTYPE,
 )
 from repro.models.linear_core import (
-    chunked_linear_attention, linear_attention_step,
+    chunked_linear_attention, linear_attention_step, pad_mask_gates,
 )
 
 
@@ -70,7 +70,7 @@ def _mlstm_qkv(p, c_in, scale):
     return q, k, v
 
 
-def _mlstm_seq(p, x, state, chunk):
+def _mlstm_seq(p, x, state, chunk, vl=None):
     """Full-sequence mLSTM block. state: (S [B,nh,hd,hd], n [B,nh,hd])."""
     B, S, d = x.shape
     h = rmsnorm(x, p["ln"])
@@ -80,6 +80,8 @@ def _mlstm_seq(p, x, state, chunk):
     nh, hd = p["wq"].shape[1], p["wq"].shape[2]
     q, k, v = _mlstm_qkv(p, c_in, hd ** -0.5)
     log_f, log_i = _mlstm_gates(p, c_in)
+    if vl is not None:
+        log_f, log_i = pad_mask_gates(log_f, log_i, vl)
     Sm, Nm = state
     y, Sm = chunked_linear_attention(q, k, v, log_f, log_i, chunk=chunk,
                                      initial_state=Sm)
@@ -131,15 +133,29 @@ def _slstm_cell(p, x_t, carry):
     return (c, n, h_new, m_new), h_new
 
 
-def _slstm_seq(p, x, state):
+def _slstm_seq(p, x, state, vl=None):
     B, S, d = x.shape
     h0 = rmsnorm(x, p["ln"])
 
-    def step(carry, x_t):
-        carry, h_t = _slstm_cell(p, x_t, carry)
-        return carry, h_t
+    if vl is None:
+        def step(carry, x_t):
+            carry, h_t = _slstm_cell(p, x_t, carry)
+            return carry, h_t
 
-    state, hs = lax.scan(step, state, h0.transpose(1, 0, 2))
+        state, hs = lax.scan(step, state, h0.transpose(1, 0, 2))
+    else:
+        # hidden-state recurrence: gate masking alone cannot preserve h, so
+        # junk steps keep the whole carry via select
+        valid = jnp.arange(S)[:, None] < vl[None, :]        # [S, B]
+
+        def step(carry, xs):
+            x_t, ok = xs
+            new, h_t = _slstm_cell(p, x_t, carry)
+            carry = tuple(jnp.where(ok[:, None], nc, oc)
+                          for nc, oc in zip(new, carry))
+            return carry, h_t
+
+        state, hs = lax.scan(step, state, (h0.transpose(1, 0, 2), valid))
     y = hs.transpose(1, 0, 2).astype(x.dtype) @ p["w_out"]
     return x + y, state
 
@@ -164,9 +180,9 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
     pair_specs = {"m": _mlstm_specs(d, nh, d_in, hd), "s": _slstm_specs(d)}
     specs = {"embed": embed_specs(V, d), "pairs": stacked(pair_specs, npairs)}
 
-    def pair_seq(x, pp, state, chunk_):
-        x, mstate = _mlstm_seq(pp["m"], x, state["m"], chunk_)
-        x, sstate = _slstm_seq(pp["s"], x, state["s"])
+    def pair_seq(x, pp, state, chunk_, vl=None):
+        x, mstate = _mlstm_seq(pp["m"], x, state["m"], chunk_, vl)
+        x, sstate = _slstm_seq(pp["s"], x, state["s"], vl)
         return x, {"m": mstate, "s": sstate}
 
     def _zero_state(B):
@@ -176,10 +192,11 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
             "s": tuple(jnp.zeros((npairs, B, d), jnp.float32) for _ in range(4)),
         }
 
-    def _run_seq(params, x, state, chunk_):
+    def _run_seq(params, x, state, chunk_, vl=None):
         def body(x, xs):
             pp, st_m0, st_m1, st_s = xs
-            x, st = pair_seq(x, pp, {"m": (st_m0, st_m1), "s": st_s}, chunk_)
+            x, st = pair_seq(x, pp, {"m": (st_m0, st_m1), "s": st_s}, chunk_,
+                             vl)
             return x, (st["m"][0], st["m"][1], st["s"])
         if remat != "none":
             body = jax.checkpoint(body,
@@ -197,10 +214,13 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
     def prefill(params, batch, max_len=None):
         x = embed_tokens(params["embed"], batch["tokens"])
         B = x.shape[0]
+        vl = batch.get("lengths")
         state = _zero_state(B)
-        x, state = _run_seq(params, x, state, chunk)
-        logits = lm_head(params["embed"], x[:, -1:, :], eps)[:, 0]
-        state["lengths"] = jnp.full((B,), x.shape[1], jnp.int32)
+        x, state = _run_seq(params, x, state, chunk, vl)
+        x_last = x[:, -1:, :] if vl is None else last_valid_slice(x, vl)
+        logits = lm_head(params["embed"], x_last, eps)[:, 0]
+        state["lengths"] = (jnp.full((B,), x.shape[1], jnp.int32)
+                            if vl is None else vl.astype(jnp.int32))
         return logits, state
 
     def decode_step(params, cache, tokens, lengths):
@@ -238,5 +258,5 @@ def build(cfg: ModelConfig, mesh, rules, *, remat: str = "full",
         decode_step=decode_step,
         init_cache=init_cache,
         cache_axes=cache_axes,
-        extras={},
+        extras={"prompt_pad": True},
     )

@@ -6,6 +6,19 @@ and parked in decode *slots*; every engine step advances all active slots by
 one token through a single jitted decode step (continuous batching). Slot
 caches live in one donated buffer, so decode never reallocates.
 
+Device-resident hot path (DESIGN.md §11): the *fused* decode step folds
+sampling, per-slot length advance, EOS/max-token done-masking, and the
+next-token feedback into the one jitted function — the host sees exactly one
+compact ``[tokens ‖ done]`` transfer per step (O(1) in slots, down from the
+O(slots) per-step syncs of the reference loop, kept here as ``fused=False``
+for parity tests and before/after benchmarks). Admission likewise scatters
+the whole prefilled batch into the donated slot cache with one jitted
+masked-select, and prompts are padded up a geometric *length ladder*
+(``core.batching.prompt_length_ladder``) so distinct prefill compilations
+are bounded by the ladder, not by the workload's distinct prompt lengths —
+and mixed-length traces no longer head-of-line block behind same-length
+grouping.
+
 This is deliberately the same architecture a TPU pod would run — the jitted
 prefill/decode functions come from launch/steps.py-style builders with the
 production shardings; here they execute on the local mesh.
@@ -26,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.batching import AIMDController, bucket
+from repro.core.batching import AIMDController, bucket, prompt_length_ladder
 from repro.core import metrics as M
 from repro.core.metrics import MetricsRegistry
 from repro.distributed.sharding import sharding_context
@@ -55,6 +68,71 @@ class Request:
     finish_time: Optional[float] = None
 
 
+def make_fused_decode_fn(model: Model, mesh, rules, *, temperature: float,
+                         eos: int, max_len: int):
+    """Build the fused device-resident decode step (the engine's hot loop).
+
+    Signature: ``(params, cache, lengths, cur, active, gen, max_new, key)
+    -> (packed, cache, lengths, cur, active, gen)`` where ``packed`` is the
+    single per-step host transfer ``concat([tokens, done])`` ([2*slots]
+    int32) and everything else stays on device. Done semantics mirror the
+    reference loop token-for-token: a slot finishes when its sampled token
+    is EOS, its generated count reaches ``max_new``, or its advanced context
+    length reaches ``max_len - 1``."""
+
+    def fused(params, cache, lengths, cur, active, gen, max_new, key):
+        with sharding_context(mesh, rules):
+            logits, cache = model.decode_step(params, cache, cur, lengths)
+        toks = sample(logits, key, temperature=temperature)
+        act = active.astype(jnp.int32)
+        new_len = lengths + act
+        new_cur = jnp.where(active[:, None], toks[:, None], cur)
+        new_gen = gen + act
+        done = active & ((toks == eos) | (new_gen >= max_new)
+                         | (new_len >= max_len - 1))
+        packed = jnp.concatenate([toks.astype(jnp.int32),
+                                  done.astype(jnp.int32)])
+        return packed, cache, new_len, new_cur, active & ~done, new_gen
+
+    return fused
+
+
+def batched_scatter(cache, pcache, slot_mask, src_idx):
+    """Scatter a whole prefilled batch into the slot cache in one shot.
+
+    ``slot_mask``: [slots] bool — slots receiving a new request;
+    ``src_idx``: [slots] int32 — row of ``pcache`` for each receiving slot
+    (arbitrary where the mask is False). Implemented as gather + masked
+    select per leaf, so the donated cache is rematerialized once for the
+    whole admitted batch instead of once per request (`_scatter_cache`).
+    Leaves are [B] (lengths), or layer-stacked [L, B, ...] with an optional
+    shorter dim-2 (e.g. encoder memory) padded up to the destination."""
+
+    def leaf(dv, sv):
+        if dv.ndim == 1:
+            return jnp.where(slot_mask, sv[src_idx].astype(dv.dtype), dv)
+        sl = jnp.take(sv, src_idx, axis=1)
+        if sl.ndim > 2 and sl.shape[2] < dv.shape[2]:
+            pad = dv.shape[2] - sl.shape[2]
+            sl = jnp.pad(sl, [(0, 0), (0, 0), (0, pad)]
+                         + [(0, 0)] * (sl.ndim - 3))
+        m = slot_mask.reshape((1, slot_mask.shape[0]) + (1,) * (sl.ndim - 2))
+        return jnp.where(m, sl.astype(dv.dtype), dv)
+
+    return jax.tree.map(leaf, cache, pcache)
+
+
+def _admit_state(lengths, cur, active, gen, max_new, slot_mask, src_idx,
+                 vlens, firsts, maxnews):
+    """Batched slot-state update at admission (device-resident mirror of the
+    per-request bookkeeping): one dispatch for the whole admitted batch."""
+    new_len = jnp.where(slot_mask, vlens[src_idx], lengths)
+    new_cur = jnp.where(slot_mask[:, None], firsts[src_idx][:, None], cur)
+    new_gen = jnp.where(slot_mask, 1, gen)
+    new_maxn = jnp.where(slot_mask, maxnews[src_idx], max_new)
+    return new_len, new_cur, active | slot_mask, new_gen, new_maxn
+
+
 class LMServer:
     """Continuous-batching server for one Model."""
 
@@ -64,7 +142,9 @@ class LMServer:
                  seed: int = 0, clock: Callable[[], float] = time.perf_counter,
                  metrics: Optional[MetricsRegistry] = None,
                  service_model: Optional[ServiceModel] = None,
-                 model_id: str = "lm", admission_control=None):
+                 model_id: str = "lm", admission_control=None,
+                 fused: bool = True, prefill_slo_frac: float = 0.5,
+                 pad_prompts: Optional[bool] = None):
         self.model = model
         self.mesh = mesh
         self.rules = rules
@@ -90,26 +170,57 @@ class LMServer:
         # controller that governs prefill admission below.
         self.admission_control = admission_control
         self.shed = 0
-        self.admission = AIMDController(slo, additive=1, init=1,
-                                        max_batch=slots)
+        # prefill-only service time gets its own latency budget — a fraction
+        # of the request SLO — rather than the full SLO, which would bias
+        # max_batch high (prefill is only the first leg of a request)
+        self.prefill_slo_frac = prefill_slo_frac
+        self.admission = AIMDController(slo * prefill_slo_frac, additive=1,
+                                        init=1, max_batch=slots)
+        self.fused = fused
+        # prompt-length ladder (only meaningful on the fused path; the
+        # reference path reproduces the PR-3 same-length grouping exactly)
+        if pad_prompts is None:
+            pad_prompts = fused and bool(model.extras.get("prompt_pad"))
+        self.pad_prompts = pad_prompts
+        self._pad_cap = min(max_len,
+                            int(model.extras.get("prompt_pad_cap", max_len)))
+        self.length_ladder = prompt_length_ladder(self._pad_cap)
         self.rng = jax.random.PRNGKey(seed)
         self._queue: List[Request] = []
         self._active: Dict[int, Request] = {}      # slot -> request
         self._next_id = 0
         self.completed: Dict[int, Request] = {}
+        # hot-path instrumentation (bench_serving reads these)
+        self.decode_steps = 0
+        self.decode_host_syncs = 0
+        self.prefill_dispatches = 0
 
         self.cache = model.init_cache(slots, max_len)
         self.lengths = jnp.zeros((slots,), jnp.int32)
         self.cur_tokens = jnp.zeros((slots, 1), jnp.int32)
+        self.active_mask = jnp.zeros((slots,), jnp.bool_)
+        self.gen_counts = jnp.zeros((slots,), jnp.int32)
+        self.max_new = jnp.zeros((slots,), jnp.int32)
 
-        def decode_fn(params, cache, tokens, lengths, key):
-            with sharding_context(mesh, rules):
-                logits, cache = model.decode_step(params, cache, tokens, lengths)
-            toks = sample(logits, key, temperature=temperature)
-            return toks, cache
+        if fused:
+            self._decode_fused = jax.jit(
+                make_fused_decode_fn(model, mesh, rules,
+                                     temperature=temperature, eos=eos_token,
+                                     max_len=max_len),
+                donate_argnums=(1, 2, 3, 4, 5))
+            self._scatter_jit = jax.jit(batched_scatter, donate_argnums=(0,))
+            self._admit_state_jit = jax.jit(_admit_state,
+                                            donate_argnums=(0, 1, 2, 3, 4))
+        else:
+            def decode_fn(params, cache, tokens, lengths, key):
+                with sharding_context(mesh, rules):
+                    logits, cache = model.decode_step(params, cache, tokens,
+                                                      lengths)
+                toks = sample(logits, key, temperature=temperature)
+                return toks, cache
 
-        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
-        self._prefill_cache: Dict[int, Any] = {}   # bucket -> jitted prefill
+            self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._prefill_cache: Dict[Any, Any] = {}   # shape key -> jitted prefill
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
@@ -152,22 +263,47 @@ class LMServer:
         self.clock.advance(dt)      # ctor guarantees the clock is advanceable
         return dt
 
-    def _prefill_jit(self, b: int, plen: int):
-        key = (b, plen)
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct compiled prefill shapes so far — with the length ladder
+        this is bounded by (batch rungs × ladder rungs), not by the number
+        of distinct prompt lengths in the trace."""
+        return len(self._prefill_cache)
+
+    def _prefill_jit(self, b: int, plen: int, padded: bool):
+        key = (b, plen, padded)
         if key not in self._prefill_cache:
-            def fn(params, tokens):
-                with sharding_context(self.mesh, self.rules):
-                    return self.model.prefill(params, {"tokens": tokens},
-                                              max_len=self.max_len)
+            if padded:
+                def fn(params, tokens, lengths):
+                    with sharding_context(self.mesh, self.rules):
+                        return self.model.prefill(
+                            params, {"tokens": tokens, "lengths": lengths},
+                            max_len=self.max_len)
+            else:
+                def fn(params, tokens):
+                    with sharding_context(self.mesh, self.rules):
+                        return self.model.prefill(params, {"tokens": tokens},
+                                                  max_len=self.max_len)
             self._prefill_cache[key] = jax.jit(fn)
         return self._prefill_cache[key]
 
-    def _admit(self, params) -> None:
-        free = [s for s in range(self.slots) if s not in self._active]
-        if not free or not self._queue:
-            return
-        n = min(len(free), len(self._queue), self.admission.max_batch_size)
-        # admit a same-length group (prefill has no per-sample prompt masking;
+    # ------------------------------------------------------------------
+    def _take_batch(self, n: int):
+        """Dequeue up to ``n`` requests for one prefill dispatch; returns
+        ``(batch, padded)``.
+
+        Ladder mode (``padded=True``): the FIFO prefix whose prompts fit
+        the pad cap — mixed lengths ride together (no same-length
+        head-of-line blocking). Fallback (reference mode, moe, or an
+        over-cap head prompt): the PR-3 same-length group around the
+        queue head."""
+        if self.pad_prompts and len(self._queue[0].prompt) <= self._pad_cap:
+            batch: List[Request] = []
+            while (self._queue and len(batch) < n
+                   and len(self._queue[0].prompt) <= self._pad_cap):
+                batch.append(self._queue.pop(0))
+            return batch, True
+        # same-length group (prefill has no per-sample prompt masking here;
         # grouping by length avoids junk-token attention)
         plen = len(self._queue[0].prompt)
         batch = []
@@ -175,18 +311,39 @@ class LMServer:
             if len(r.prompt) == plen and len(batch) < n:
                 batch.append(r)
                 self._queue.remove(r)
+        return batch, False
+
+    def _admit(self, params) -> None:
+        free = [s for s in range(self.slots) if s not in self._active]
+        if not free or not self._queue:
+            return
+        n = min(len(free), len(self._queue), self.admission.max_batch_size)
+        batch, padded = self._take_batch(n)
         n = len(batch)
         if n == 0:
             return
         self.metrics.observe(M.QUEUE_DEPTH, n + len(self._queue))
+        if padded:
+            plen = bucket(max(len(r.prompt) for r in batch),
+                          ladder=self.length_ladder)
+        else:
+            plen = len(batch[0].prompt)
         nb = bucket(n, cap=self.slots)
         toks = np.zeros((nb, plen), np.int32)
+        vlens = np.full((nb,), plen, np.int32)
         for i, r in enumerate(batch):
-            toks[i] = r.prompt
+            L = len(r.prompt)
+            toks[i, :L] = r.prompt
+            vlens[i] = L
         t0 = self.clock()
-        logits, pcache = self._prefill_jit(nb, plen)(
-            params, jnp.asarray(toks))
+        if padded:
+            logits, pcache = self._prefill_jit(nb, plen, True)(
+                params, jnp.asarray(toks), jnp.asarray(vlens))
+        else:
+            logits, pcache = self._prefill_jit(nb, plen, False)(
+                params, jnp.asarray(toks))
         jax.block_until_ready(logits)
+        self.prefill_dispatches += 1
         # the service model is charged the *executed* shape (padded bucket),
         # matching what wall-clock mode measures for the same workload
         dt = self._service_time("prefill", nb, plen, t0)
@@ -196,26 +353,64 @@ class LMServer:
         self.metrics.mark(self.clock())
         self.rng, k = jax.random.split(self.rng)
         first = sample(logits, k, temperature=self.temperature)
-        first = np.asarray(first)
-        # scatter prefilled caches into decode slots
-        for i, r in enumerate(batch):
-            s = free[i]
-            r.slot = s
-            r.prefill_time = dt
-            r.tokens.append(int(first[i]))
-            self._active[s] = r
-            self.cache = _scatter_cache(self.cache, pcache, i, s)
-            self.lengths = self.lengths.at[s].set(plen)
-            self.cur_tokens = self.cur_tokens.at[s, 0].set(int(first[i]))
+        first_np = np.asarray(first)
+        if self.fused:
+            # one jitted scatter + one jitted state update for the whole
+            # admitted batch (the donated cache is rematerialized once, not
+            # once per request)
+            slot_mask = np.zeros((self.slots,), bool)
+            src_idx = np.zeros((self.slots,), np.int32)
+            maxnews = np.zeros((nb,), np.int32)
+            for i, r in enumerate(batch):
+                s = free[i]
+                r.slot = s
+                r.prefill_time = dt
+                r.tokens.append(int(first_np[i]))
+                self._active[s] = r
+                slot_mask[s] = True
+                src_idx[s] = i
+                maxnews[i] = r.max_new_tokens
+            slot_mask = jnp.asarray(slot_mask)
+            src_idx = jnp.asarray(src_idx)
+            self.cache = self._scatter_jit(self.cache, pcache, slot_mask,
+                                           src_idx)
+            (self.lengths, self.cur_tokens, self.active_mask,
+             self.gen_counts, self.max_new) = self._admit_state_jit(
+                self.lengths, self.cur_tokens, self.active_mask,
+                self.gen_counts, self.max_new, slot_mask, src_idx,
+                jnp.asarray(vlens), first.astype(jnp.int32),
+                jnp.asarray(maxnews))
+        else:
+            # reference path: per-request scatter, per-slot host bookkeeping
+            for i, r in enumerate(batch):
+                s = free[i]
+                r.slot = s
+                r.prefill_time = dt
+                r.tokens.append(int(first_np[i]))
+                self._active[s] = r
+                self.cache = _scatter_cache(self.cache, pcache, i, s)
+                self.lengths = self.lengths.at[s].set(int(vlens[i]))
+                self.cur_tokens = self.cur_tokens.at[s, 0].set(
+                    int(first_np[i]))
 
     def _decode_once(self, params) -> None:
         if not self._active:
             return
+        if self.fused:
+            self._decode_once_fused(params)
+        else:
+            self._decode_once_reference(params)
+
+    def _decode_once_fused(self, params) -> None:
         t0 = self.clock()
         self.rng, k = jax.random.split(self.rng)
-        toks, self.cache = self._decode(params, self.cache, self.cur_tokens,
-                                        self.lengths, k)
-        toks = np.asarray(toks)
+        (packed, self.cache, self.lengths, self.cur_tokens,
+         self.active_mask, self.gen_counts) = self._decode_fused(
+            params, self.cache, self.lengths, self.cur_tokens,
+            self.active_mask, self.gen_counts, self.max_new, k)
+        out = np.asarray(packed)            # the ONE host transfer per step
+        self.decode_host_syncs += 1
+        toks, done = out[:self.slots], out[self.slots:].astype(bool)
         n_active = len(self._active)
         # executed shape: the jitted decode computes every slot each step
         # regardless of how many are active, like the wall-clock engine
@@ -223,6 +418,26 @@ class LMServer:
         # decode steps dominate LM serving work — they count as dispatched
         # batches alongside prefill, so the report reflects the whole run
         self._observe_batch(n_active, dt)
+        self.decode_steps += 1
+        for s, r in list(self._active.items()):
+            r.tokens.append(int(toks[s]))
+            if done[s]:
+                self._finish(s, r)
+
+    def _decode_once_reference(self, params) -> None:
+        """PR-3 hot path, kept verbatim as the parity/benchmark baseline:
+        per-slot ``int()`` pulls and per-slot ``.at[].set`` feedback — the
+        O(slots) host round-trips the fused step eliminates."""
+        t0 = self.clock()
+        self.rng, k = jax.random.split(self.rng)
+        toks, self.cache = self._decode(params, self.cache, self.cur_tokens,
+                                        self.lengths, k)
+        toks = np.asarray(toks)
+        self.decode_host_syncs += 1
+        n_active = len(self._active)
+        dt = self._service_time("decode", self.slots, 1, t0)
+        self._observe_batch(n_active, dt)
+        self.decode_steps += 1
         self.lengths = self.lengths + jnp.asarray(
             [1 if s in self._active else 0 for s in range(self.slots)],
             jnp.int32)
@@ -230,15 +445,23 @@ class LMServer:
             t = int(toks[s])
             r.tokens.append(t)
             self.cur_tokens = self.cur_tokens.at[s, 0].set(t)
+            cur_len = int(self.lengths[s])
+            self.decode_host_syncs += 1     # per-slot device read
             if (t == self.eos or len(r.tokens) >= r.max_new_tokens
-                    or int(self.lengths[s]) >= self.max_len - 1):
-                r.done = True
-                r.finish_time = self.clock()
-                self.completed[r.request_id] = r
-                del self._active[s]
-                self.metrics.inc(M.QUERIES_COMPLETED)
-                self.metrics.observe_latency(r.finish_time - r.arrival_time)
-                self.metrics.mark(r.finish_time)
+                    or cur_len >= self.max_len - 1):
+                self._finish(s, r)
+
+    def _finish(self, s: int, r: Request) -> None:
+        r.done = True
+        r.finish_time = self.clock()
+        self.completed[r.request_id] = r
+        del self._active[s]
+        # tagged per-model so multi-model cluster reports can separate LM
+        # completions from frontend ones
+        self.metrics.inc_both(M.QUERIES_COMPLETED, model=self.model_id)
+        self.metrics.observe_latency(r.finish_time - r.arrival_time,
+                                     model=self.model_id)
+        self.metrics.mark(r.finish_time)
 
     def _observe_batch(self, size: int, service: float) -> None:
         """One dispatched batch (prefill or decode) into the shared schema —
@@ -270,6 +493,13 @@ class LMServer:
             "completed": len(self.completed),
             "shed": self.shed,
             "admission_max_batch": self.admission.max_batch_size,
+            "decode_steps": self.decode_steps,
+            "decode_host_syncs": self.decode_host_syncs,
+            "host_syncs_per_decode_step": (
+                self.decode_host_syncs / self.decode_steps
+                if self.decode_steps else 0.0),
+            "prefill_compiles": self.prefill_compiles,
+            "prefill_dispatches": self.prefill_dispatches,
         }
 
     def report(self) -> Dict[str, Any]:
@@ -282,7 +512,8 @@ class LMServer:
 
 
 def _scatter_cache(cache, pcache, src: int, dst: int):
-    """Copy request ``src`` of a prefill cache into slot ``dst``."""
+    """Copy request ``src`` of a prefill cache into slot ``dst`` (reference
+    per-request path; the fused engine uses :func:`batched_scatter`)."""
     out = {}
     for k, v in cache.items():
         pv = pcache[k]
