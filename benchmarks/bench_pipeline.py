@@ -1,0 +1,156 @@
+"""Pipeline benchmark: cascade serving vs the monolithic accurate-model
+baseline, plus the intermediate-cache hit rate swept over trace skew
+(DESIGN.md §12).
+
+Everything runs as calibrated discrete-event simulation under a virtual
+clock, so every number is a pure function of the seed and the emitted
+``BENCH_pipeline.json`` is byte-identical across runs (CI cmp's it).
+
+Headline contract: at equal or better SLO attainment the cascade beats the
+monolithic deployment on p99 latency *and* on cost, where cost is
+replica-seconds — total busy seconds across every model replica (the
+quantity a cluster bill scales with). The cascade answers ~85% of queries
+with the cheap draft tier and pays the accurate model only for the
+low-agreement remainder, while the monolith pays it for everything.
+
+    PYTHONPATH=src python benchmarks/bench_pipeline.py --out BENCH_pipeline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+
+def _cost_replica_seconds(rep: dict) -> float:
+    """Total busy seconds across all models/replicas (service_s sums are
+    exact in the shared histogram schema)."""
+    return sum(pm["service_s"]["sum"] or 0.0
+               for pm in rep["per_model"].values())
+
+
+def _summary(rep: dict) -> dict:
+    return {
+        "queries": rep["queries"],
+        "p50_ms": (rep["latency_s"]["p50"] or 0.0) * 1e3,
+        "p99_ms": (rep["latency_s"]["p99"] or 0.0) * 1e3,
+        "slo_attainment": rep["slo"]["attainment"],
+        "replica_seconds": _cost_replica_seconds(rep),
+        "cache_hit_rate": rep["cache"]["hit_rate"],
+    }
+
+
+def run_cascade_vs_monolithic(scenario) -> dict:
+    """Same trace, same SLO, same accurate model: cascade pipeline vs a
+    single-model deployment of the accurate model."""
+    from repro.core.frontend import make_clipper
+    from repro.pipeline.scenario import pipeline_models, run_pipeline
+    from repro.workloads import traces as T
+    from repro.workloads.scenario import D_FEAT
+
+    casc = run_pipeline(scenario, "cascade")
+
+    models, lat, _, _ = pipeline_models(scenario)
+    mono = make_clipper({"accurate": models["accurate"]}, "exp4",
+                        slo=scenario.slo, replicas=scenario.replicas,
+                        latency_models={"accurate": lat["accurate"]},
+                        batch_delay=scenario.batch_delay, seed=scenario.seed)
+    trace = T.query_trace(scenario.arrival_times(), scenario.seed,
+                          d_feat=D_FEAT, pool=scenario.pool)
+    mono.replay(trace)
+    mono_rep = mono.report()
+
+    c, m = _summary(casc), _summary(mono_rep)
+    return {
+        "cascade": {**c,
+                    "escalation_rate": casc["pipeline"]["escalation_rate"],
+                    "stage_jobs": casc["pipeline"]["stage_jobs"]},
+        "monolithic": m,
+        "wins": {
+            "p99_latency": c["p99_ms"] < m["p99_ms"],
+            "replica_seconds": (c["replica_seconds"]
+                                < m["replica_seconds"]),
+            "attainment_no_worse": (c["slo_attainment"]
+                                    >= m["slo_attainment"]),
+        },
+    }
+
+
+def run_cache_skew_sweep(scenario, pools=(0, 64, 256, 1024)) -> list:
+    """Intermediate-cache hit rate vs trace skew: ``pool=0`` is
+    cache-defeating (every query unique); small Zipf pools concentrate
+    mass on few queries, so whole pipeline prefixes resolve from cache."""
+    from repro.pipeline.scenario import run_pipeline
+
+    rows = []
+    for pool in pools:
+        sc = dataclasses.replace(scenario, pool=pool)
+        rep = run_pipeline(sc, "cascade")
+        rows.append({
+            "pool": pool,
+            "cache_hit_rate": rep["cache"]["hit_rate"],
+            "per_model_hit_rate": {
+                m: pm["cache"]["hit_rate"]
+                for m, pm in sorted(rep["per_model"].items())},
+            "p99_ms": (rep["latency_s"]["p99"] or 0.0) * 1e3,
+            "replica_seconds": _cost_replica_seconds(rep),
+        })
+    return rows
+
+
+def build_report(seed: int = 0) -> dict:
+    from repro.pipeline.scenario import pipeline_scenario
+
+    sc = pipeline_scenario(seed=seed)
+    return {
+        "bench": "pipeline",
+        "scenario": dataclasses.asdict(sc),
+        "cascade_vs_monolithic": run_cascade_vs_monolithic(sc),
+        "cache_skew_sweep": run_cache_skew_sweep(sc),
+    }
+
+
+# -- harness contract (benchmarks/run.py) -----------------------------------
+
+def run(rng: np.random.Generator = None) -> list:
+    rep = build_report()
+    cvm = rep["cascade_vs_monolithic"]
+    rows = []
+    for name in ("cascade", "monolithic"):
+        r = cvm[name]
+        rows.append({
+            "name": f"pipeline/{name}",
+            "us_per_call": r["p99_ms"] * 1e3,
+            "derived": (f"attainment={r['slo_attainment']:.3f};"
+                        f"replica_s={r['replica_seconds']:.3f}"),
+        })
+    for row in rep["cache_skew_sweep"]:
+        rows.append({
+            "name": f"pipeline_cache/pool_{row['pool']}",
+            "us_per_call": row["p99_ms"] * 1e3,
+            "derived": f"hit_rate={row['cache_hit_rate']:.3f}",
+        })
+    return rows
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here (default: stdout)")
+    args = ap.parse_args(argv)
+    rep = build_report(seed=args.seed)
+    text = json.dumps(rep, sort_keys=True, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    else:
+        print(text)
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ import numpy as np
 def main() -> None:
     from benchmarks import (bench_autoscale, bench_batching, bench_cache,
                             bench_context, bench_ensembles, bench_overhead,
-                            bench_scaling, bench_stragglers)
+                            bench_pipeline, bench_scaling, bench_stragglers)
 
     suites = [
         ("fig3/4/5 batching", bench_batching),
@@ -26,6 +26,7 @@ def main() -> None:
         ("fig11 overhead", bench_overhead),
         ("sec4.2 cache", bench_cache),
         ("control plane", bench_autoscale),
+        ("pipelines", bench_pipeline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -66,12 +66,18 @@ class SloAdmission:
         self.margin = margin
         self.default_service = default_service
 
-    # -- frontend hook (Clipper.submit) ---------------------------------
+    # -- frontend hook (Clipper.submit / submit_stage) ------------------
     def admit(self, clip, q: Query, chosen: Sequence[str], *,
-              cached: bool = False) -> List[str]:
+              cached: bool = False,
+              shed_counter: str = M.QUERIES_SHED,
+              degraded_counter: str = M.QUERIES_DEGRADED) -> List[str]:
         """Return the subset of ``chosen`` to actually enqueue. Empty with
         ``cached=False`` means the query is shed (counted here); empty with
-        ``cached=True`` degrades to a cache-only answer."""
+        ``cached=True`` degrades to a cache-only answer.
+
+        ``shed_counter`` / ``degraded_counter`` name the series the
+        decision is recorded under — pipeline stage jobs pass stage-scoped
+        names so ``admission.shed/degraded`` stay one-per-pipeline-query."""
         slack = (q.deadline - clip.now) if q.deadline is not None else None
         if slack is None:
             return list(chosen)
@@ -83,16 +89,16 @@ class SloAdmission:
         if self.policy == "shed":
             if meetable or cached:
                 return list(chosen)
-            clip.metrics.inc(M.QUERIES_SHED)
+            clip.metrics.inc(shed_counter)
             return []
         if not meetable:
             if cached:
-                clip.metrics.inc(M.QUERIES_DEGRADED)
+                clip.metrics.inc(degraded_counter)
                 return []
-            clip.metrics.inc(M.QUERIES_SHED)
+            clip.metrics.inc(shed_counter)
             return []
         if len(meetable) < len(chosen):
-            clip.metrics.inc(M.QUERIES_DEGRADED)
+            clip.metrics.inc(degraded_counter)
         return meetable
 
     # -- LMServer hook (engine.submit) ----------------------------------

@@ -56,7 +56,11 @@ class Autoscaler:
 
     ``make_replica(model_id) -> JaxModelContainer`` supplies fresh replicas;
     in calibrated simulation it must seed each new container's latency
-    model deterministically (see ``plan.replica_factory``)."""
+    model deterministically (see ``plan.replica_factory``).
+
+    ``slo`` may be a float or a zero-arg callable returning one — the
+    pipeline stack passes the model's *stage share* of the pipeline SLO as
+    a callable so the drain target follows the planner's live replans."""
 
     def __init__(self, rs: ReplicaSet,
                  make_replica: Callable[[str], JaxModelContainer],
@@ -87,7 +91,8 @@ class Autoscaler:
         if est <= 0.0:
             return cfg.min_replicas            # no signal yet
         backlog = sum(len(self.rs.queues[i]) for i in self.rs.routable())
-        drain = cfg.drain_target if cfg.drain_target is not None else self.slo
+        slo = self.slo() if callable(self.slo) else self.slo
+        drain = cfg.drain_target if cfg.drain_target is not None else slo
         n_rate = math.ceil(lam * est / cfg.utilization_cap)
         n_backlog = math.ceil(backlog * est / drain) if drain > 0 else 0
         want = max(n_rate, n_backlog, cfg.min_replicas)

@@ -53,7 +53,7 @@ class ClusterPlan:
     """One reproducible control-plane run."""
 
     scenario: Scenario
-    stack: str = "frontend"         # frontend | lmserver
+    stack: str = "frontend"         # frontend | lmserver | pipeline
     autoscale: bool = True          # frontend stack only
     admission: Optional[str] = None          # None | shed | degrade
     router: str = "lect"            # lect | least_loaded
@@ -107,6 +107,55 @@ def replica_factory(scenario: Scenario, models: Dict[str, Any]):
 # drivers
 # ---------------------------------------------------------------------------
 
+def _drive_ticks(serve, submit, trace, autoscalers: List[Autoscaler],
+                 plan: ClusterPlan) -> None:
+    """Tick-driven replay shared by the frontend and pipeline stacks:
+    arrivals are interleaved with event processing as in ``Clipper.replay``,
+    but the clock is stepped in control periods and every autoscaler
+    observes the world at each boundary. ``serve`` needs ``run`` / ``now``
+    (settable) / ``pending``; ``submit(x, ctx, at)`` issues one query."""
+    i, t, idle = 0, 0.0, 0
+    while True:
+        t += plan.tick
+        while i < len(trace) and trace[i][0] <= t:
+            at, x, ctx = trace[i]
+            serve.run(until=at)
+            submit(x, ctx, at)
+            i += 1
+        serve.run(until=t)
+        if serve.now < t:
+            # idle gap: advance the virtual clock so delayed batches and
+            # drain checks see time passing, then dispatch what became ready
+            serve.now = t
+            serve.run(until=t)
+        for a in autoscalers:
+            a.tick(t)
+        if i >= len(trace) and not serve.pending:
+            idle += 1
+            # end only after the cooldown AND once every autoscaler has
+            # drained back to its floor — a short trace that ends mid-burst
+            # must still unwind its scale-ups (one retire per tick, so this
+            # terminates within max_replicas extra ticks)
+            if (idle > plan.cooldown_ticks
+                    and all(a.rs.n_live <= a.cfg.min_replicas
+                            for a in autoscalers)):
+                break
+        else:
+            idle = 0
+
+
+def _cluster_section(plan: ClusterPlan, autoscalers: List[Autoscaler],
+                     replica_sets) -> Dict[str, Any]:
+    return {
+        "plan": plan.describe(),
+        "autoscalers": [a.summary() for a in autoscalers],
+        "replica_sets": {mid: {"live": rs.n_live,
+                               "total_slots": len(rs.replicas),
+                               "replicas": rs.replica_stats()}
+                         for mid, rs in sorted(replica_sets.items())},
+    }
+
+
 def _run_frontend(plan: ClusterPlan) -> Dict[str, Any]:
     s = plan.scenario
     models, lat = frontend_models(s)
@@ -126,46 +175,45 @@ def _run_frontend(plan: ClusterPlan) -> Dict[str, Any]:
                                           clip.metrics, cfg, slo=s.slo))
     trace = T.query_trace(s.arrival_times(), s.seed, d_feat=D_FEAT,
                           pool=s.pool)
-    # tick-driven replay: arrivals are interleaved with event processing as
-    # in Clipper.replay, but the clock is stepped in control periods and
-    # every autoscaler observes the world at each boundary
-    i, t, idle = 0, 0.0, 0
-    while True:
-        t += plan.tick
-        while i < len(trace) and trace[i][0] <= t:
-            at, x, ctx = trace[i]
-            clip.run(until=at)
-            clip.submit(x, context_id=ctx, arrival_time=at)
-            i += 1
-        clip.run(until=t)
-        if clip.now < t:
-            # idle gap: advance the virtual clock so delayed batches and
-            # drain checks see time passing, then dispatch what became ready
-            clip.now = t
-            clip.run(until=t)
-        for a in autoscalers:
-            a.tick(t)
-        if i >= len(trace) and not clip.pending:
-            idle += 1
-            # end only after the cooldown AND once every autoscaler has
-            # drained back to its floor — a short trace that ends mid-burst
-            # must still unwind its scale-ups (one retire per tick, so this
-            # terminates within max_replicas extra ticks)
-            if (idle > plan.cooldown_ticks
-                    and all(a.rs.n_live <= a.cfg.min_replicas
-                            for a in autoscalers)):
-                break
-        else:
-            idle = 0
+    _drive_ticks(clip, lambda x, ctx, at: clip.submit(
+        x, context_id=ctx, arrival_time=at), trace, autoscalers, plan)
     rep = clip.report()
-    rep["cluster"] = {
-        "plan": plan.describe(),
-        "autoscalers": [a.summary() for a in autoscalers],
-        "replica_sets": {mid: {"live": rs.n_live,
-                               "total_slots": len(rs.replicas),
-                               "replicas": rs.replica_stats()}
-                         for mid, rs in sorted(clip.replica_sets.items())},
-    }
+    rep["cluster"] = _cluster_section(plan, autoscalers, clip.replica_sets)
+    return rep
+
+
+def _run_pipeline(plan: ClusterPlan) -> Dict[str, Any]:
+    """Pipeline stack with per-stage provisioning: every stage model gets
+    its own autoscaler whose drain target is the *stage's* share of the
+    pipeline SLO (planner split), so a hot verify tier grows independently
+    of an idle draft tier."""
+    from repro.pipeline.scenario import (build_executor, pipeline_models,
+                                         pipeline_replica_factory)
+
+    s = plan.scenario
+    admission = (SloAdmission(policy=plan.admission,
+                              margin=plan.admission_margin)
+                 if plan.admission else None)
+    zoo = pipeline_models(s)        # one zoo: executor + replica factory
+    ex = build_executor(s, "cascade", admission=admission,
+                        router=make_router(plan.router), zoo=zoo)
+    autoscalers: List[Autoscaler] = []
+    if plan.autoscale:
+        factory = pipeline_replica_factory(s, zoo[0])
+        cfg = plan.autoscaler_config()
+        for mid in sorted(ex.replica_sets):
+            # callable: the drain target follows the planner's live replans
+            # instead of freezing at the prior-based initial split
+            stage_slo = (lambda mid=mid:
+                         ex.split.shares[ex.stage_of[mid]])
+            autoscalers.append(Autoscaler(ex.replica_sets[mid], factory,
+                                          ex.metrics, cfg, slo=stage_slo))
+    trace = T.query_trace(s.arrival_times(), s.seed, d_feat=D_FEAT,
+                          pool=s.pool)
+    _drive_ticks(ex.clip, lambda x, ctx, at: ex.submit(x, arrival_time=at),
+                 trace, autoscalers, plan)
+    rep = ex.report()
+    rep["cluster"] = _cluster_section(plan, autoscalers, ex.replica_sets)
     return rep
 
 
@@ -188,6 +236,8 @@ def run_plan(plan: ClusterPlan) -> Dict[str, Any]:
         rep = _run_frontend(plan)
     elif plan.stack == "lmserver":
         rep = _run_lmserver(plan)
+    elif plan.stack == "pipeline":
+        rep = _run_pipeline(plan)
     else:
         raise ValueError(f"unknown stack: {plan.stack}")
     rep["scenario"] = dataclasses.asdict(plan.scenario)

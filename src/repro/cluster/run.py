@@ -34,8 +34,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="named load profile (re-parameterized for the "
                         "control-plane regime; see DESIGN.md §10)")
     p.add_argument("--stack", default="frontend",
-                   choices=("frontend", "lmserver"),
-                   help="serving stack to drive (autoscaling: frontend only)")
+                   choices=("frontend", "lmserver", "pipeline"),
+                   help="serving stack to drive (autoscaling: frontend and "
+                        "pipeline; the pipeline stack provisions each stage "
+                        "independently)")
     p.add_argument("--seed", type=int, default=None,
                    help="override the scenario seed")
     p.add_argument("--duration", type=float, default=None,
@@ -67,7 +69,16 @@ def main(argv=None) -> int:
                                    ("rate", args.rate),
                                    ("replicas", args.replicas))
                  if v is not None}
-    sc = cluster_scenario(args.scenario, **overrides)
+    if args.stack == "pipeline":
+        # the pipeline stack brings its own model zoo + cost shape
+        # (repro.pipeline.scenario); the single-model CLUSTER_DEFAULTS
+        # would distort it, so use the named scenario as-is
+        import dataclasses
+
+        from repro.workloads.scenario import SCENARIOS as _S
+        sc = dataclasses.replace(_S[args.scenario], **overrides)
+    else:
+        sc = cluster_scenario(args.scenario, **overrides)
     if sc.duration <= 0:
         parser.error("--duration must be > 0")
     if sc.rate <= 0:

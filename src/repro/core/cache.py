@@ -125,8 +125,12 @@ class PredictionCache:
     """(model_id, digest(x)) -> prediction, on top of ClockCache.
 
     When a ``MetricsRegistry`` is attached, every ``request`` is reported as
-    a ``cache.hits`` / ``cache.misses`` increment — the shared telemetry
-    schema (metrics.py) both serving stacks emit."""
+    a ``cache.hits`` / ``cache.misses`` increment — both globally and under
+    the model's label, so ``report()['per_model'][m]['cache']`` breaks the
+    hit rate down per model (the shared telemetry schema both stacks emit).
+    The same mechanism serves as the pipeline *intermediate-result* cache:
+    stage inputs are digested like any query, so two pipelines sharing a
+    stage (same model id, same stage input) compute it once."""
 
     def __init__(self, capacity: int, metrics=None):
         self.cache = ClockCache(capacity)
@@ -138,7 +142,8 @@ class PredictionCache:
     def request(self, model_id: str, x: Any) -> bool:
         hit = self.cache.request(self.key(model_id, x))
         if self.metrics is not None:
-            self.metrics.inc(M.CACHE_HITS if hit else M.CACHE_MISSES)
+            self.metrics.inc_both(M.CACHE_HITS if hit else M.CACHE_MISSES,
+                                  model=model_id)
         return hit
 
     def fetch(self, model_id: str, x: Any) -> Optional[Any]:

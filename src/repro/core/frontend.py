@@ -26,7 +26,8 @@ from repro.core.batching import AIMDController, BatchQueue
 from repro.core.cache import PredictionCache
 from repro.core.containers import JaxModelContainer, ReplicaSet
 from repro.core.interfaces import Feedback, Prediction, Query
-from repro.core.metrics import (MetricsRegistry, QUERIES_COMPLETED,
+from repro.core.metrics import (MetricsRegistry, PIPELINE_STAGES_DEGRADED,
+                                PIPELINE_STAGES_SHED, QUERIES_COMPLETED,
                                 QUERIES_ROUTED, QUERIES_SUBMITTED)
 from repro.core.selection import Exp3Policy, Exp4Policy
 from repro.core.straggler import assemble_preds, record_stragglers
@@ -93,31 +94,82 @@ class Clipper:
         qid = next(self._qseq)
         q = Query(qid, x, context_id, at, deadline=at + self.slo)
         chosen = self.policy.select(self._policy_state_for(q), x, self.rng)
+        cached, uncached = self._probe_and_admit(q, chosen, rescope=False)
+        if not uncached and not cached:
+            # shed: never enqueued, never completes — callers checking
+            # ``results[qid]`` must consult ``shed_qids`` first
+            self.shed_qids.add(qid)
+            return qid
+        entry = {"query": q, "need": set(cached) | set(uncached),
+                 "preds": cached, "done": False}
+        self._start_entry(entry, uncached)
+        return qid
+
+    def submit_stage(self, model_ids: Sequence[str], x, *, deadline: float,
+                     finalize: Callable[[Dict[str, Any], Tuple[str, ...], bool],
+                                        None],
+                     arrival_time: Optional[float] = None) -> int:
+        """Low-level stage job for DAG pipelines (repro.pipeline): evaluate
+        ``x`` on ``model_ids`` under an absolute per-stage ``deadline`` and
+        call ``finalize(preds, missing_models, at_deadline)`` exactly once —
+        when every model returned, or at the deadline with whatever arrived
+        (stage-level straggler mitigation, same semantics as ensembles).
+
+        Stage jobs ride the ordinary machinery: the prediction cache is
+        consulted first (this is the pipeline's intermediate-result cache —
+        a hit skips the model entirely), admission control may narrow or
+        shed the stage, and batching/routing are untouched. Unlike
+        ``submit``, no global query counters move here: the pipeline
+        executor accounts queries at pipeline granularity. A stage shed
+        entirely with nothing cached finalizes immediately with empty preds
+        — the executor decides what an empty stage means."""
+        at = self.now if arrival_time is None else arrival_time
+        self.now = max(self.now, at)
+        self.metrics.mark(at)
+        qid = next(self._qseq)
+        q = Query(qid, x, 0, at, deadline=deadline)
+        cached, uncached = self._probe_and_admit(q, model_ids, rescope=True)
+        entry = {"query": q, "need": set(cached) | set(uncached),
+                 "preds": cached, "done": False, "finalize": finalize}
+        self._start_entry(entry, uncached)
+        return qid
+
+    def _probe_and_admit(self, q: Query, model_ids: Sequence[str], *,
+                         rescope: bool) -> Tuple[Dict[str, Any], List[str]]:
+        """The cache-probe + admission core both submit paths share:
+        returns ``(cached predictions, models still to evaluate)``.
+        Admission (when configured) drops models — or everything — whose
+        deadline is already unmeetable given the backlog (DESIGN.md §10).
+
+        ``rescope=True`` (stage jobs) records admission's shed/degraded
+        decisions under stage-level names, so ``admission.shed`` stays
+        one-per-*pipeline*-query (the executor accounts those) and
+        ``completed + shed == submitted`` keeps holding."""
         cached: Dict[str, Any] = {}
         uncached: List[str] = []
-        for mid in chosen:
-            if self.cache is not None and self.cache.request(mid, x):
-                cached[mid] = self.cache.fetch(mid, x)
+        for mid in model_ids:
+            if self.cache is not None and self.cache.request(mid, q.x):
+                cached[mid] = self.cache.fetch(mid, q.x)
             else:
                 uncached.append(mid)
         if self.admission is not None and uncached:
-            # early load shedding (DESIGN.md §10): drop models (or the whole
-            # query) whose deadline is already unmeetable given the backlog
+            counters = ({"shed_counter": PIPELINE_STAGES_SHED,
+                         "degraded_counter": PIPELINE_STAGES_DEGRADED}
+                        if rescope else {})
             uncached = self.admission.admit(self, q, uncached,
-                                            cached=bool(cached))
-            if not uncached and not cached:
-                # shed: never enqueued, never completes — callers checking
-                # ``results[qid]`` must consult ``shed_qids`` first
-                self.shed_qids.add(qid)
-                return qid
-        entry = {"query": q, "need": set(cached) | set(uncached),
-                 "preds": cached, "done": False}
-        self._pending[qid] = entry
+                                            cached=bool(cached), **counters)
+        return cached, uncached
+
+    def _start_entry(self, entry: dict, uncached: Sequence[str]) -> None:
+        """Register a pending entry, route its uncached models, arm the
+        deadline, and finalize immediately if nothing needs computing."""
+        q: Query = entry["query"]
+        self._pending[q.query_id] = entry
         for mid in uncached:
             self._route(mid, q)
-        self._push(q.deadline, "deadline", qid)
+        if uncached:
+            self._push(q.deadline, "deadline", q.query_id)
         self._maybe_finalize(entry)
-        return qid
 
     def feedback(self, fb: Feedback) -> None:
         """Join feedback with cached predictions and update selection state
@@ -200,18 +252,38 @@ class Clipper:
         entry = self._pending.get(qid)
         if entry is None or entry["done"]:
             return
+        # no predictions at all: mark late and leave pending; the *first*
+        # model to return then renders immediately (latency SLO already
+        # blown — recorded as violation) instead of waiting for the rest
+        entry["late"] = True
         if entry["preds"]:
             self._finalize(entry, at_deadline=True)
-        # no predictions at all: leave pending; it completes when the first
-        # model returns (latency SLO already blown — recorded as violation)
 
     def _maybe_finalize(self, entry) -> None:
-        if not entry["done"] and entry["need"] <= set(entry["preds"]):
+        if entry["done"]:
+            return
+        if entry["need"] <= set(entry["preds"]):
             self._finalize(entry, at_deadline=False)
+        elif entry.get("late") and entry["preds"]:
+            # past the deadline with nothing rendered yet: a late partial
+            # answer beats waiting out the stragglers (paper §5.2.2)
+            self._finalize(entry, at_deadline=True)
 
     def _finalize(self, entry, *, at_deadline: bool) -> None:
         q: Query = entry["query"]
         preds = {m: p for m, p in entry["preds"].items()}
+        # finalized entries leave the pending map — late completions find
+        # nothing and skip (they still feed the cache); without this the
+        # map grows with every query served, ~4x faster for stage jobs
+        self._pending.pop(q.query_id, None)
+        fin = entry.get("finalize")
+        if fin is not None:
+            # stage job (submit_stage): hand the arrived predictions to the
+            # pipeline executor; global query accounting stays with it
+            entry["done"] = True
+            self.metrics.mark(self.now)
+            fin(preds, tuple(sorted(entry["need"] - set(preds))), at_deadline)
+            return
         s = self._policy_state_for(q)
         y, conf = self.policy.combine(s, q.x, preds)
         missing = tuple(sorted(entry["need"] - set(preds)))
@@ -295,7 +367,22 @@ class Clipper:
 
 
 def _default_loss(y, y_true) -> float:
-    """0/1 loss on argmax for class scores; absolute error otherwise."""
+    """0/1 loss on argmax for class scores; absolute error otherwise.
+
+    Pipeline combine stages produce *structured* predictions — a
+    ``{"y": scores, "confidence": ...}`` dict or a ``(scores, ...)`` tuple —
+    which ``np.asarray`` would mangle (object arrays, ragged errors). Unwrap
+    them to the payload first: dicts by their ``"y"`` key (else the first
+    sorted key), tuples by their first element."""
+    while isinstance(y, (dict, tuple)):
+        if isinstance(y, dict):
+            if not y:
+                raise ValueError("empty dict prediction has no loss")
+            y = y["y"] if "y" in y else y[sorted(y)[0]]
+        else:
+            if not y:
+                raise ValueError("empty tuple prediction has no loss")
+            y = y[0]
     y = np.asarray(y)
     if y.ndim >= 1 and y.size > 1:
         return float(np.argmax(y) != np.asarray(y_true))

@@ -42,6 +42,11 @@ CACHE_HITS = "cache.hits"
 CACHE_MISSES = "cache.misses"
 STRAGGLER_PARTIAL = "straggler.partial_queries"
 STRAGGLER_DROPPED = "straggler.dropped_models"
+PIPELINE_STAGE_JOBS = "pipeline.stage_jobs"      # stage jobs launched
+PIPELINE_STAGES_SKIPPED = "pipeline.stages_skipped"  # gated off (cascade)
+PIPELINE_ESCALATIONS = "pipeline.escalations"    # gated stages that ran
+PIPELINE_STAGES_SHED = "pipeline.stages_shed"    # stage jobs admission shed
+PIPELINE_STAGES_DEGRADED = "pipeline.stages_degraded"  # stage jobs narrowed
 BATCHES = "batches.dispatched"
 LATENCY = "latency_s"          # end-to-end query latency histogram
 SERVICE = "service_s"          # per-batch model service time histogram
@@ -298,6 +303,9 @@ class MetricsRegistry:
             "per_model": {
                 m: {
                     "queries": self.counter(QUERIES_SUBMITTED, model=m),
+                    # per-model prediction-cache counters (PredictionCache
+                    # reports labeled hits/misses alongside the global pair)
+                    "cache": self._model_cache(m),
                     # completions + end-to-end latency are tagged per model
                     # (LMServer does; the ensemble frontend completes
                     # queries across models, so these stay 0/empty there) —
@@ -313,6 +321,15 @@ class MetricsRegistry:
             },
         }
         return rep
+
+    def _model_cache(self, m: str) -> Dict[str, Any]:
+        hits = self.counter(CACHE_HITS, model=m)
+        misses = self.counter(CACHE_MISSES, model=m)
+        return {
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / (hits + misses) if (hits + misses) else 0.0,
+        }
 
     def report_json(self, stack: str, **extra: Any) -> str:
         """Stable JSON rendering — byte-identical for identical runs."""

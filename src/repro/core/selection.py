@@ -136,6 +136,12 @@ class Exp4Policy:
         return list(self.model_ids)
 
     def combine(self, s, x, preds: Dict[str, Any]):
+        if len(preds) == 1:
+            # single prediction: pass through unchanged (weighted mean of
+            # one element) — also lets structured dict/tuple outputs from
+            # pipeline-style containers ride the plain frontend
+            (_, y), = preds.items()
+            return y, 1.0
         # pure-numpy hot path: this runs per query on the frontend host —
         # a per-query jitted-JAX dispatch would dominate serving overhead
         # (batched/vmapped state *updates* stay in JAX: context.py)

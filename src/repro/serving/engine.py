@@ -144,7 +144,8 @@ class LMServer:
                  service_model: Optional[ServiceModel] = None,
                  model_id: str = "lm", admission_control=None,
                  fused: bool = True, prefill_slo_frac: float = 0.5,
-                 pad_prompts: Optional[bool] = None):
+                 pad_prompts: Optional[bool] = None,
+                 on_finish: Optional[Callable[["Request"], None]] = None):
         self.model = model
         self.mesh = mesh
         self.rules = rules
@@ -170,6 +171,10 @@ class LMServer:
         # controller that governs prefill admission below.
         self.admission_control = admission_control
         self.shed = 0
+        # cascade hook (repro.pipeline.cascade): invoked once per request at
+        # completion, after the engine's own bookkeeping — a draft engine's
+        # callback decides whether to escalate to a verify engine
+        self.on_finish = on_finish
         # prefill-only service time gets its own latency budget — a fraction
         # of the request SLO — rather than the full SLO, which would bias
         # max_batch high (prefill is only the first leg of a request)
@@ -462,6 +467,8 @@ class LMServer:
         self.metrics.observe_latency(r.finish_time - r.arrival_time,
                                      model=self.model_id)
         self.metrics.mark(r.finish_time)
+        if self.on_finish is not None:
+            self.on_finish(r)
 
     def _observe_batch(self, size: int, service: float) -> None:
         """One dispatched batch (prefill or decode) into the shared schema —

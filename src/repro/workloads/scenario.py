@@ -86,6 +86,12 @@ SCENARIOS: Dict[str, Scenario] = {
                         base_latency=0.004, pool=0),
     "stragglers": Scenario("stragglers", rate=250.0, ensemble=4,
                            p_straggle=0.03, pool=0),
+    # the prediction-pipeline regime (repro.pipeline, DESIGN.md §12): load
+    # near the *accurate* model's saturation point so a cascade matters, a
+    # Zipf query pool so the intermediate cache matters
+    "pipeline": Scenario("pipeline", rate=300.0, duration=2.0, pool=256,
+                         base_latency=0.001, per_item_latency=1e-4,
+                         max_new_tokens=8),
 }
 
 
