@@ -70,14 +70,18 @@ class SloAdmission:
     def admit(self, clip, q: Query, chosen: Sequence[str], *,
               cached: bool = False,
               shed_counter: str = M.QUERIES_SHED,
-              degraded_counter: str = M.QUERIES_DEGRADED) -> List[str]:
+              degraded_counter: str = M.QUERIES_DEGRADED,
+              trace_parent=None) -> List[str]:
         """Return the subset of ``chosen`` to actually enqueue. Empty with
         ``cached=False`` means the query is shed (counted here); empty with
         ``cached=True`` degrades to a cache-only answer.
 
         ``shed_counter`` / ``degraded_counter`` name the series the
         decision is recorded under — pipeline stage jobs pass stage-scoped
-        names so ``admission.shed/degraded`` stay one-per-pipeline-query."""
+        names so ``admission.shed/degraded`` stay one-per-pipeline-query.
+        ``trace_parent``: when the query carries a sampled trace
+        (repro.obs), shed/degrade verdicts are recorded as instant events
+        under it."""
         slack = (q.deadline - clip.now) if q.deadline is not None else None
         if slack is None:
             return list(chosen)
@@ -90,16 +94,29 @@ class SloAdmission:
             if meetable or cached:
                 return list(chosen)
             clip.metrics.inc(shed_counter)
+            self._trace(clip, trace_parent, "shed", slack, chosen, [])
             return []
         if not meetable:
             if cached:
                 clip.metrics.inc(degraded_counter)
+                self._trace(clip, trace_parent, "degrade", slack, chosen, [])
                 return []
             clip.metrics.inc(shed_counter)
+            self._trace(clip, trace_parent, "shed", slack, chosen, [])
             return []
         if len(meetable) < len(chosen):
             clip.metrics.inc(degraded_counter)
+            self._trace(clip, trace_parent, "degrade", slack, chosen, meetable)
         return meetable
+
+    @staticmethod
+    def _trace(clip, parent, verdict: str, slack: float,
+               chosen: Sequence[str], kept: Sequence[str]) -> None:
+        if parent is None or getattr(clip, "tracer", None) is None:
+            return
+        clip.tracer.event(parent, verdict, "frontend.admission", clip.now,
+                          attrs={"slack_s": slack,
+                                 "dropped": sorted(set(chosen) - set(kept))})
 
     # -- LMServer hook (engine.submit) ----------------------------------
     def admit_lm(self, srv, now: float) -> bool:

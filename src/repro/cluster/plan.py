@@ -156,7 +156,7 @@ def _cluster_section(plan: ClusterPlan, autoscalers: List[Autoscaler],
     }
 
 
-def _run_frontend(plan: ClusterPlan) -> Dict[str, Any]:
+def _run_frontend(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
     s = plan.scenario
     models, lat = frontend_models(s)
     admission = (SloAdmission(policy=plan.admission,
@@ -165,7 +165,7 @@ def _run_frontend(plan: ClusterPlan) -> Dict[str, Any]:
     clip = make_clipper(models, "exp4", slo=s.slo, replicas=s.replicas,
                         latency_models=lat, batch_delay=s.batch_delay,
                         seed=s.seed, router=make_router(plan.router),
-                        admission=admission)
+                        admission=admission, tracer=tracer)
     autoscalers: List[Autoscaler] = []
     if plan.autoscale:
         factory = replica_factory(s, models)
@@ -182,7 +182,7 @@ def _run_frontend(plan: ClusterPlan) -> Dict[str, Any]:
     return rep
 
 
-def _run_pipeline(plan: ClusterPlan) -> Dict[str, Any]:
+def _run_pipeline(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
     """Pipeline stack with per-stage provisioning: every stage model gets
     its own autoscaler whose drain target is the *stage's* share of the
     pipeline SLO (planner split), so a hot verify tier grows independently
@@ -196,7 +196,8 @@ def _run_pipeline(plan: ClusterPlan) -> Dict[str, Any]:
                  if plan.admission else None)
     zoo = pipeline_models(s)        # one zoo: executor + replica factory
     ex = build_executor(s, "cascade", admission=admission,
-                        router=make_router(plan.router), zoo=zoo)
+                        router=make_router(plan.router), zoo=zoo,
+                        tracer=tracer)
     autoscalers: List[Autoscaler] = []
     if plan.autoscale:
         factory = pipeline_replica_factory(s, zoo[0])
@@ -217,27 +218,28 @@ def _run_pipeline(plan: ClusterPlan) -> Dict[str, Any]:
     return rep
 
 
-def _run_lmserver(plan: ClusterPlan) -> Dict[str, Any]:
+def _run_lmserver(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
     s = plan.scenario
     admission = (SloAdmission(policy=plan.admission,
                               margin=plan.admission_margin)
                  if plan.admission else None)
-    runner = ScenarioRunner(s)
+    runner = ScenarioRunner(s, tracer=tracer)
     rep = runner.run_lmserver(admission=admission)
     rep["cluster"] = {"plan": plan.describe(), "autoscalers": [],
                       "replica_sets": {}}
     return rep
 
 
-def run_plan(plan: ClusterPlan) -> Dict[str, Any]:
+def run_plan(plan: ClusterPlan, *, tracer=None) -> Dict[str, Any]:
     """Execute the plan; returns the shared-schema report with the extra
-    ``cluster`` section and trace provenance ``meta``."""
+    ``cluster`` section and trace provenance ``meta``. ``tracer``: an
+    optional ``repro.obs.Tracer`` threaded into the chosen stack."""
     if plan.stack == "frontend":
-        rep = _run_frontend(plan)
+        rep = _run_frontend(plan, tracer)
     elif plan.stack == "lmserver":
-        rep = _run_lmserver(plan)
+        rep = _run_lmserver(plan, tracer)
     elif plan.stack == "pipeline":
-        rep = _run_pipeline(plan)
+        rep = _run_pipeline(plan, tracer)
     else:
         raise ValueError(f"unknown stack: {plan.stack}")
     rep["scenario"] = dataclasses.asdict(plan.scenario)
@@ -245,6 +247,6 @@ def run_plan(plan: ClusterPlan) -> Dict[str, Any]:
     return rep
 
 
-def run_plan_json(plan: ClusterPlan) -> str:
+def run_plan_json(plan: ClusterPlan, *, tracer=None) -> str:
     """Stable JSON rendering — byte-identical for identical plans."""
-    return json.dumps(run_plan(plan), sort_keys=True, indent=2)
+    return json.dumps(run_plan(plan, tracer=tracer), sort_keys=True, indent=2)

@@ -33,15 +33,24 @@ class LeastExpectedCompletion:
     per query (``ReplicaSet.est_service``). Replicas without observations
     use ``default_service`` (0 = optimistic, so fresh replicas attract work
     and build stats immediately). Ties break on backlog then index, so the
-    choice is deterministic."""
+    choice is deterministic.
+
+    Each call leaves the decision's evidence in ``last_attrs`` — the
+    chosen replica's expected completion seconds — which the frontend
+    merges into the query's queue span when tracing is on, so a flamegraph
+    shows what the router *predicted* next to what actually happened."""
 
     def __init__(self, default_service: float = 0.0):
         self.default_service = default_service
+        self.last_attrs = {}
 
     def __call__(self, rs: ReplicaSet, now: float) -> int:
-        return min(rs.candidates(), key=lambda i: (
+        ri = min(rs.candidates(), key=lambda i: (
             rs.expected_completion(i, now, self.default_service),
             len(rs.queues[i]), i))
+        self.last_attrs = {
+            "ect_s": rs.expected_completion(ri, now, self.default_service)}
+        return ri
 
 
 ROUTERS = {

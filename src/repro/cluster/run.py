@@ -58,6 +58,13 @@ def build_parser() -> argparse.ArgumentParser:
                    help="autoscaler ceiling per model")
     p.add_argument("--report-out", default=None,
                    help="write the JSON report here instead of stdout")
+    p.add_argument("--trace-out", default=None,
+                   help="record per-query spans (repro.obs) and write the "
+                        "repro.trace/v1 span log here — byte-identical per "
+                        "seed; convert with python -m repro.obs.export")
+    p.add_argument("--trace-sample-rate", type=float, default=1.0,
+                   help="head-based trace sampling rate in [0, 1] "
+                        "(default 1.0; only meaningful with --trace-out)")
     return p
 
 
@@ -94,7 +101,16 @@ def main(argv=None) -> int:
                        autoscale=args.autoscale, admission=args.admission,
                        router=args.router, tick=args.tick,
                        max_replicas=args.max_replicas)
-    text = run_plan_json(plan)
+    tracer = None
+    if args.trace_out:
+        if not 0.0 <= args.trace_sample_rate <= 1.0:
+            parser.error("--trace-sample-rate must be in [0, 1]")
+        from repro.obs import Tracer
+        tracer = Tracer(sample_rate=args.trace_sample_rate, seed=sc.seed)
+    text = run_plan_json(plan, tracer=tracer)
+    if args.trace_out:
+        with open(args.trace_out, "w") as f:
+            f.write(tracer.to_json() + "\n")
     if args.report_out:
         with open(args.report_out, "w") as f:
             f.write(text + "\n")

@@ -174,13 +174,18 @@ class BatchQueue:
 
     ``metrics`` / ``model_id``: when attached (frontend does this at
     construction), every dispatch reports queue depth, batch size, and
-    per-model service time through the shared telemetry schema."""
+    per-model service time through the shared telemetry schema.
+
+    ``tracer``: when attached (repro.obs), every dispatch additionally
+    emits a global ``batch.dispatch`` trace event — the batch boundaries a
+    flamegraph needs to explain queue-wait spans."""
 
     controller: AIMDController
     batch_delay: float = 0.0
     _q: Deque[Query] = field(default_factory=deque)
     metrics: Optional[object] = None
     model_id: Optional[str] = None
+    tracer: Optional[object] = None
 
     def put(self, query: Query) -> None:
         self._q.append(query)
@@ -219,6 +224,10 @@ class BatchQueue:
         depth = len(self._q)
         n = min(depth, self.controller.max_batch_size)
         batch = [self._q.popleft() for _ in range(n)]
+        if self.tracer is not None and batch:
+            self.tracer.global_event(
+                "dispatch", "frontend.batch", now,
+                attrs={"model": self.model_id, "size": n, "depth": depth})
         if self.metrics is not None and batch:
             self.metrics.observe(M.QUEUE_DEPTH, depth)
             if self.model_id is not None:

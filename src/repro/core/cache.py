@@ -132,18 +132,27 @@ class PredictionCache:
     stage inputs are digested like any query, so two pipelines sharing a
     stage (same model id, same stage input) compute it once."""
 
-    def __init__(self, capacity: int, metrics=None):
+    def __init__(self, capacity: int, metrics=None, tracer=None):
         self.cache = ClockCache(capacity)
         self.metrics = metrics
+        # span tracing (repro.obs): probes annotate the querying trace
+        self.tracer = tracer
 
     def key(self, model_id: str, x: Any) -> Hashable:
         return (model_id, digest(x))
 
-    def request(self, model_id: str, x: Any) -> bool:
+    def request(self, model_id: str, x: Any, *, parent=None,
+                now: float = 0.0) -> bool:
         hit = self.cache.request(self.key(model_id, x))
         if self.metrics is not None:
             self.metrics.inc_both(M.CACHE_HITS if hit else M.CACHE_MISSES,
                                   model=model_id)
+        if self.tracer is not None and parent is not None:
+            # instant event under the query's root span: cache probes are
+            # zero-duration in virtual time but decide the whole lifecycle
+            self.tracer.event(parent, "hit" if hit else "miss",
+                              "frontend.cache", now,
+                              attrs={"model": model_id})
         return hit
 
     def fetch(self, model_id: str, x: Any) -> Optional[Any]:

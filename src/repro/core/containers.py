@@ -121,6 +121,7 @@ class ReplicaSet:
         self._make_controller = make_controller
         self._batch_delay = batch_delay
         self._metrics = None
+        self._tracer = None
         self.queues = [BatchQueue(make_controller(), batch_delay)
                        for _ in replicas]
         self.free_at = [0.0 for _ in replicas]
@@ -135,6 +136,13 @@ class ReplicaSet:
         for queue in self.queues:
             queue.metrics = metrics
             queue.model_id = self.model_id
+
+    def attach_tracer(self, tracer) -> None:
+        """Point every queue (current or future) at a shared span tracer
+        (repro.obs) — the same contract as ``attach_metrics``."""
+        self._tracer = tracer
+        for queue in self.queues:
+            queue.tracer = tracer
 
     def healthy(self) -> List[int]:
         return [i for i, r in enumerate(self.replicas)
@@ -167,6 +175,8 @@ class ReplicaSet:
         if self._metrics is not None:
             queue.metrics = self._metrics
             queue.model_id = self.model_id
+        if self._tracer is not None:
+            queue.tracer = self._tracer
         self.replicas.append(container)
         self.queues.append(queue)
         self.free_at.append(float(now))

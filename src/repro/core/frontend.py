@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import json
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -51,7 +52,7 @@ class Clipper:
                  use_cache: bool = True,
                  metrics: Optional[MetricsRegistry] = None,
                  router: Optional[Callable[[ReplicaSet, float], int]] = None,
-                 admission=None):
+                 admission=None, tracer=None):
         self.replica_sets = replica_sets
         self.policy = policy
         self.slo = slo
@@ -60,13 +61,19 @@ class Clipper:
         # ``admission`` may narrow or reject the chosen ensemble per query
         self.router = router
         self.admission = admission
+        # span tracing (repro.obs, DESIGN.md §13): None = tracing off, no
+        # per-query overhead beyond these ``is not None`` checks
+        self.tracer = tracer
         self.metrics = metrics if metrics is not None else MetricsRegistry(slo)
-        self.cache = (PredictionCache(cache_size, metrics=self.metrics)
+        self.cache = (PredictionCache(cache_size, metrics=self.metrics,
+                                      tracer=tracer)
                       if use_cache else None)
         # batching + cache layers report through the same registry, so both
         # serving stacks emit one telemetry schema (metrics.py)
         for rs in replica_sets.values():
             rs.attach_metrics(self.metrics)
+            if tracer is not None:
+                rs.attach_tracer(tracer)
         self.loss_fn = loss_fn or _default_loss
         self.contextual = contextual_store
         self.rng = np.random.default_rng(seed)
@@ -93,22 +100,32 @@ class Clipper:
         self.metrics.mark(at)
         qid = next(self._qseq)
         q = Query(qid, x, context_id, at, deadline=at + self.slo)
+        trace = None
+        if self.tracer is not None:
+            # root span: the whole query lifecycle; budget = the full SLO
+            trace = self.tracer.start_trace(
+                "query", "frontend", at, budget_s=self.slo,
+                attrs={"qid": qid})
         chosen = self.policy.select(self._policy_state_for(q), x, self.rng)
-        cached, uncached = self._probe_and_admit(q, chosen, rescope=False)
+        cached, uncached = self._probe_and_admit(q, chosen, rescope=False,
+                                                 trace=trace)
         if not uncached and not cached:
             # shed: never enqueued, never completes — callers checking
             # ``results[qid]`` must consult ``shed_qids`` first
             self.shed_qids.add(qid)
+            if self.tracer is not None:
+                self.tracer.end_trace(trace, self.now, status="shed")
             return qid
         entry = {"query": q, "need": set(cached) | set(uncached),
-                 "preds": cached, "done": False}
+                 "preds": cached, "done": False, "trace": trace}
         self._start_entry(entry, uncached)
         return qid
 
     def submit_stage(self, model_ids: Sequence[str], x, *, deadline: float,
                      finalize: Callable[[Dict[str, Any], Tuple[str, ...], bool],
                                         None],
-                     arrival_time: Optional[float] = None) -> int:
+                     arrival_time: Optional[float] = None,
+                     trace_parent=None) -> int:
         """Low-level stage job for DAG pipelines (repro.pipeline): evaluate
         ``x`` on ``model_ids`` under an absolute per-stage ``deadline`` and
         call ``finalize(preds, missing_models, at_deadline)`` exactly once —
@@ -128,14 +145,17 @@ class Clipper:
         self.metrics.mark(at)
         qid = next(self._qseq)
         q = Query(qid, x, 0, at, deadline=deadline)
-        cached, uncached = self._probe_and_admit(q, model_ids, rescope=True)
+        cached, uncached = self._probe_and_admit(q, model_ids, rescope=True,
+                                                 trace=trace_parent)
         entry = {"query": q, "need": set(cached) | set(uncached),
-                 "preds": cached, "done": False, "finalize": finalize}
+                 "preds": cached, "done": False, "finalize": finalize,
+                 "trace": trace_parent}
         self._start_entry(entry, uncached)
         return qid
 
     def _probe_and_admit(self, q: Query, model_ids: Sequence[str], *,
-                         rescope: bool) -> Tuple[Dict[str, Any], List[str]]:
+                         rescope: bool,
+                         trace=None) -> Tuple[Dict[str, Any], List[str]]:
         """The cache-probe + admission core both submit paths share:
         returns ``(cached predictions, models still to evaluate)``.
         Admission (when configured) drops models — or everything — whose
@@ -148,7 +168,8 @@ class Clipper:
         cached: Dict[str, Any] = {}
         uncached: List[str] = []
         for mid in model_ids:
-            if self.cache is not None and self.cache.request(mid, q.x):
+            if self.cache is not None and self.cache.request(
+                    mid, q.x, parent=trace, now=self.now):
                 cached[mid] = self.cache.fetch(mid, q.x)
             else:
                 uncached.append(mid)
@@ -157,7 +178,8 @@ class Clipper:
                          "degraded_counter": PIPELINE_STAGES_DEGRADED}
                         if rescope else {})
             uncached = self.admission.admit(self, q, uncached,
-                                            cached=bool(cached), **counters)
+                                            cached=bool(cached),
+                                            trace_parent=trace, **counters)
         return cached, uncached
 
     def _start_entry(self, entry: dict, uncached: Sequence[str]) -> None:
@@ -165,8 +187,19 @@ class Clipper:
         deadline, and finalize immediately if nothing needs computing."""
         q: Query = entry["query"]
         self._pending[q.query_id] = entry
+        trace = entry.get("trace")
+        if trace is not None:
+            entry["tqueue"] = {}
         for mid in uncached:
-            self._route(mid, q)
+            ri = self._route(mid, q)
+            if trace is not None:
+                # queue span opens at enqueue; _dispatch_ready closes it
+                # when the query leaves the replica's batch queue. Routers
+                # exposing ``last_attrs`` (LECT) annotate their prediction.
+                attrs = {"model": mid, "replica": ri}
+                attrs.update(getattr(self.router, "last_attrs", None) or {})
+                entry["tqueue"][mid] = self.tracer.start_span(
+                    trace, "queue", "frontend.queue", self.now, attrs=attrs)
         if uncached:
             self._push(q.deadline, "deadline", q.query_id)
         self._maybe_finalize(entry)
@@ -231,10 +264,32 @@ class Clipper:
                         [q.x for q in batch])
                     done_at = self.now + service
                     rs.free_at[ri] = done_at
+                    if self.tracer is not None:
+                        self._trace_dispatch(
+                            mid, ri, batch, done_at,
+                            getattr(queue.controller, "slo", None))
                     self._push(done_at, "complete", dict(
                         mid=mid, ri=ri, batch=batch, outs=outs,
                         service=service, size=len(batch)))
                     progressed = True
+
+    def _trace_dispatch(self, mid: str, ri: int, batch: Sequence[Query],
+                        done_at: float, budget: Optional[float]) -> None:
+        """Per-query trace bookkeeping at batch dispatch: close the queue
+        span, record the service span (budget = the batch controller's
+        latency target), and remember dispatch/completion times for
+        finalize-time attribution."""
+        for q in batch:
+            entry = self._pending.get(q.query_id)
+            if entry is None or entry.get("trace") is None:
+                continue
+            self.tracer.end_span(entry["tqueue"].pop(mid, None), self.now)
+            self.tracer.add_span(
+                entry["trace"], "service", "frontend.service", self.now,
+                done_at, budget_s=budget,
+                attrs={"model": mid, "replica": ri, "batch": len(batch)})
+            entry.setdefault("tdisp", {})[mid] = self.now
+            entry.setdefault("tdone", {})[mid] = done_at
 
     def _on_complete(self, mid, ri, batch, outs, service, size) -> None:
         rs = self.replica_sets[mid]
@@ -256,6 +311,9 @@ class Clipper:
         # model to return then renders immediately (latency SLO already
         # blown — recorded as violation) instead of waiting for the rest
         entry["late"] = True
+        if self.tracer is not None and entry.get("trace") is not None:
+            self.tracer.event(entry["trace"], "deadline", "frontend.slo",
+                              self.now)
         if entry["preds"]:
             self._finalize(entry, at_deadline=True)
 
@@ -276,10 +334,18 @@ class Clipper:
         # nothing and skip (they still feed the cache); without this the
         # map grows with every query served, ~4x faster for stage jobs
         self._pending.pop(q.query_id, None)
+        trace = entry.get("trace")
+        if trace is not None:
+            # models still queued at render time never served this query:
+            # close their queue spans truncated (every started span ends)
+            for span in entry.get("tqueue", {}).values():
+                self.tracer.end_span(span, self.now, truncated=True)
+            entry["tqueue"] = {}
         fin = entry.get("finalize")
         if fin is not None:
             # stage job (submit_stage): hand the arrived predictions to the
-            # pipeline executor; global query accounting stays with it
+            # pipeline executor; global query accounting — and the stage
+            # span wrapping this job — stay with it
             entry["done"] = True
             self.metrics.mark(self.now)
             fin(preds, tuple(sorted(entry["need"] - set(preds))), at_deadline)
@@ -289,6 +355,8 @@ class Clipper:
         missing = tuple(sorted(entry["need"] - set(preds)))
         entry["done"] = True
         latency = self.now - q.arrival_time
+        if trace is not None:
+            self._end_query_trace(entry, q, latency, missing, at_deadline)
         self.metrics.mark(self.now)
         self.metrics.inc(QUERIES_COMPLETED)
         self.metrics.observe_latency(latency)
@@ -297,6 +365,38 @@ class Clipper:
             q.query_id, y, conf, tuple(sorted(preds)),
             latency=latency,
             missing_models=missing)
+
+    def _end_query_trace(self, entry, q: Query, latency: float,
+                         missing: Tuple[str, ...],
+                         at_deadline: bool) -> None:
+        """Exact latency attribution (DESIGN.md §13): partition end-to-end
+        latency along the *critical model* — the used prediction that
+        finished last. queue + service + straggler_wait == latency, so the
+        run-level fractions sum to 1."""
+        done = {m: t for m, t in entry.get("tdone", {}).items()
+                if m in entry["preds"]}
+        attribution = None
+        if latency > 0:
+            if done:
+                crit = max(done, key=lambda m: (done[m], m))
+                attribution = {
+                    "frontend.queue": entry["tdisp"][crit] - q.arrival_time,
+                    "frontend.service": done[crit] - entry["tdisp"][crit],
+                    "frontend.straggler_wait": self.now - done[crit],
+                }
+                if self.now > done[crit]:
+                    self.tracer.add_span(
+                        entry["trace"], "straggler_wait",
+                        "frontend.straggler", done[crit], self.now,
+                        attrs={"critical_model": crit})
+            else:
+                # rendered from cache alone at the deadline: every moment
+                # of the latency was spent waiting on stragglers
+                attribution = {"frontend.straggler_wait": latency}
+        self.tracer.end_trace(
+            entry["trace"], self.now, attribution=attribution,
+            status="deadline" if at_deadline else "ok",
+            attrs={"missing": len(missing)})
 
     # ------------------------------------------------------------------
     def _policy_state_for(self, q: Query):
@@ -315,10 +415,11 @@ class Clipper:
             self.contextual.observe_exp4(np.asarray([fb.context_id]),
                                          lvec[None, :])
 
-    def _route(self, mid: str, q: Query) -> None:
+    def _route(self, mid: str, q: Query) -> int:
         """Enqueue on the replica the router picks (default: least-loaded
         among routable replicas) and count the routed demand — the arrival
-        signal the autoscaler's queueing model samples."""
+        signal the autoscaler's queueing model samples. Returns the chosen
+        replica index (trace annotation)."""
         rs = self.replica_sets[mid]
         if self.router is not None:
             ri = self.router(rs, self.now)
@@ -326,6 +427,7 @@ class Clipper:
             ri = min(rs.candidates(), key=lambda i: len(rs.queues[i]))
         rs.queues[ri].put(q)
         self.metrics.inc(QUERIES_ROUTED, model=mid)
+        return ri
 
     def _push(self, at: float, kind: str, payload) -> None:
         heapq.heappush(self._events, _Event(at, next(self._eseq), kind, payload))
@@ -359,11 +461,19 @@ class Clipper:
 
     def report(self) -> Dict[str, Any]:
         """Canonical telemetry report (metrics.py schema, shared with
-        LMServer)."""
-        return self.metrics.report("frontend")
+        LMServer). With a tracer attached the report gains the run-level
+        ``latency_attribution`` (fractions of end-to-end latency per
+        component, exact under a virtual clock) and a ``trace`` summary."""
+        rep = self.metrics.report("frontend")
+        if self.tracer is not None:
+            rep["latency_attribution"] = self.tracer.attribution_report()
+            rep["trace"] = self.tracer.summary()
+        return rep
 
     def report_json(self, **extra: Any) -> str:
-        return self.metrics.report_json("frontend", **extra)
+        rep = self.report()
+        rep.update(extra)
+        return json.dumps(rep, sort_keys=True, indent=2)
 
 
 def _default_loss(y, y_true) -> float:

@@ -272,7 +272,11 @@ class MetricsRegistry:
                 "submitted": submitted,
                 "completed": completed,
             },
-            "throughput_qps": (completed / dur) if dur > 0 else 0.0,
+            # a degenerate marked span (no marks, or a single event) has no
+            # rate to derive — emit null rather than a misleading 0.0 qps,
+            # so report consumers can tell "no throughput signal" from
+            # "measured zero" (validated by repro.metrics.validate)
+            "throughput_qps": (completed / dur) if dur > 0 else None,
             "latency_s": self._hist_summary(LATENCY),
             "slo": {
                 "target_s": self.slo,

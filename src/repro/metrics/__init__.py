@@ -1,0 +1,19 @@
+"""Schema tooling for the shared report formats.
+
+The metrics *implementation* lives in ``repro.core.metrics`` (re-exported
+here for convenience); this package adds the validation surface:
+
+    PYTHONPATH=src python -m repro.metrics.validate report.json trace.json
+
+validates ``repro.metrics/v1`` reports and ``repro.trace/v1`` span logs —
+the check benches and CI use instead of ad-hoc key asserts.
+"""
+
+from repro.core.metrics import (SCHEMA, MetricsRegistry, StreamingHistogram,
+                                VirtualClock)
+
+# NOTE: repro.metrics.validate is intentionally NOT imported here — eager
+# import would trip runpy's double-import warning under
+# ``python -m repro.metrics.validate``. Import it explicitly.
+
+__all__ = ["SCHEMA", "MetricsRegistry", "StreamingHistogram", "VirtualClock"]

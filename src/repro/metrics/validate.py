@@ -1,0 +1,259 @@
+"""Schema validation for ``repro.metrics/v1`` reports and ``repro.trace/v1``
+span logs (DESIGN.md §9/§13).
+
+    PYTHONPATH=src python -m repro.metrics.validate report.json [trace.json ...]
+
+Each file is dispatched on its ``schema`` field. Validation is hand-rolled
+(no jsonschema dependency): structural checks on the canonical key sets and
+value types, plus the semantic invariants the schemas promise —
+
+* histogram summaries are schema-stable (full key set, nulls when empty);
+* ``throughput_qps`` is ``null`` exactly when the marked span is degenerate
+  (zero duration), never a fabricated 0-division value;
+* ``latency_attribution`` fractions sum to 1 ± 1e-6 when any query was
+  attributed;
+* spans are well-formed intervals (``end >= start``), events are instants,
+  and child spans nest within their parent's bounds.
+
+``validate_report`` / ``validate_trace`` return a list of human-readable
+errors (empty = valid); the CLI exits nonzero if any file fails.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+from repro.core.metrics import SCHEMA as METRICS_SCHEMA
+from repro.obs.tracer import TRACE_SCHEMA
+
+_HIST_KEYS = {"count", "sum", "mean", "min", "max", "p50", "p95", "p99"}
+_REPORT_KEYS = {"schema", "stack", "duration_s", "queries", "throughput_qps",
+                "latency_s", "slo", "admission", "cache", "batch_size",
+                "queue_depth", "stragglers", "per_model"}
+_SPAN_KEYS = {"span_id", "trace_id", "parent_id", "name", "component",
+              "start", "end", "kind", "budget_s", "attrs"}
+_ATTRIBUTION_EPS = 1e-6
+
+
+def _num(v: Any) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _check_hist(errs: List[str], h: Any, path: str) -> None:
+    if not isinstance(h, dict):
+        errs.append(f"{path}: histogram summary must be an object")
+        return
+    missing = _HIST_KEYS - set(h)
+    if missing:
+        errs.append(f"{path}: missing histogram keys {sorted(missing)}")
+        return
+    if not isinstance(h["count"], int) or h["count"] < 0:
+        errs.append(f"{path}.count: must be a non-negative int")
+        return
+    stats = [k for k in _HIST_KEYS if k != "count"]
+    if h["count"] == 0:
+        bad = [k for k in stats if h[k] is not None]
+        if bad:
+            errs.append(f"{path}: empty histogram must have null stats, "
+                        f"got values for {sorted(bad)}")
+    else:
+        bad = [k for k in stats if not _num(h[k])]
+        if bad:
+            errs.append(f"{path}: non-numeric stats {sorted(bad)} "
+                        f"with count > 0")
+
+
+def validate_report(doc: Dict[str, Any]) -> List[str]:
+    """Validate a ``repro.metrics/v1`` report; returns errors (empty=ok)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["report: not a JSON object"]
+    if doc.get("schema") != METRICS_SCHEMA:
+        return [f"schema: expected {METRICS_SCHEMA!r}, "
+                f"got {doc.get('schema')!r}"]
+    missing = _REPORT_KEYS - set(doc)
+    if missing:
+        errs.append(f"report: missing keys {sorted(missing)}")
+        return errs
+    if not isinstance(doc["stack"], str):
+        errs.append("stack: must be a string")
+    dur = doc["duration_s"]
+    if not _num(dur) or dur < 0:
+        errs.append("duration_s: must be a non-negative number")
+        dur = None
+    q = doc["queries"]
+    if (not isinstance(q, dict)
+            or not all(isinstance(q.get(k), int)
+                       for k in ("submitted", "completed"))):
+        errs.append("queries: must carry int submitted/completed")
+    thr = doc["throughput_qps"]
+    if dur is not None:
+        if dur == 0:
+            if thr is not None:
+                errs.append("throughput_qps: must be null when the marked "
+                            f"span is degenerate (duration 0), got {thr!r}")
+        elif not _num(thr) or thr < 0:
+            errs.append("throughput_qps: must be a non-negative number "
+                        f"when duration > 0, got {thr!r}")
+    for name in ("latency_s", "batch_size", "queue_depth"):
+        _check_hist(errs, doc[name], name)
+    slo = doc["slo"]
+    if (not isinstance(slo, dict)
+            or {"target_s", "violations", "rate", "attainment"} - set(slo)):
+        errs.append("slo: must carry target_s/violations/rate/attainment")
+    adm = doc["admission"]
+    if (not isinstance(adm, dict)
+            or {"shed", "degraded", "shed_rate"} - set(adm)):
+        errs.append("admission: must carry shed/degraded/shed_rate")
+    cache = doc["cache"]
+    if (not isinstance(cache, dict)
+            or {"hits", "misses", "hit_rate"} - set(cache)):
+        errs.append("cache: must carry hits/misses/hit_rate")
+    pm = doc["per_model"]
+    if not isinstance(pm, dict):
+        errs.append("per_model: must be an object")
+    else:
+        for m, row in pm.items():
+            if not isinstance(row, dict):
+                errs.append(f"per_model[{m}]: must be an object")
+                continue
+            for name in ("latency_s", "service_s", "batch_size"):
+                if name in row:
+                    _check_hist(errs, row[name], f"per_model[{m}].{name}")
+    if "latency_attribution" in doc:
+        errs.extend(_check_attribution(doc["latency_attribution"],
+                                       "latency_attribution"))
+    if "engine" in doc and not isinstance(doc["engine"], dict):
+        errs.append("engine: must be an object")
+    return errs
+
+
+def _check_attribution(att: Any, path: str) -> List[str]:
+    errs: List[str] = []
+    if not isinstance(att, dict) or {"queries", "total_latency_s",
+                                     "components"} - set(att):
+        return [f"{path}: must carry queries/total_latency_s/components"]
+    comps = att["components"]
+    if not isinstance(comps, dict):
+        return [f"{path}.components: must be an object"]
+    fracs = []
+    for name, row in comps.items():
+        if not isinstance(row, dict) or {"seconds", "fraction"} - set(row):
+            errs.append(f"{path}.components[{name}]: must carry "
+                        "seconds/fraction")
+            continue
+        if not _num(row["seconds"]) or not _num(row["fraction"]):
+            errs.append(f"{path}.components[{name}]: non-numeric")
+            continue
+        fracs.append(row["fraction"])
+    if not errs and att["queries"] and comps:
+        s = sum(fracs)
+        if abs(s - 1.0) > _ATTRIBUTION_EPS:
+            errs.append(f"{path}: fractions sum to {s!r}, expected 1.0 "
+                        f"± {_ATTRIBUTION_EPS}")
+    return errs
+
+
+def validate_trace(doc: Dict[str, Any]) -> List[str]:
+    """Validate a ``repro.trace/v1`` span log; returns errors (empty=ok)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["trace: not a JSON object"]
+    if doc.get("schema") != TRACE_SCHEMA:
+        return [f"schema: expected {TRACE_SCHEMA!r}, "
+                f"got {doc.get('schema')!r}"]
+    for key in ("sample_rate", "seed", "traces", "sampled_traces", "spans",
+                "dropped", "capacity", "attribution"):
+        if key not in doc:
+            errs.append(f"trace: missing key {key!r}")
+    spans = doc.get("spans")
+    if not isinstance(spans, list):
+        errs.append("spans: must be a list")
+        return errs
+    if isinstance(doc.get("attribution"), dict):
+        errs.extend(_check_attribution(doc["attribution"], "attribution"))
+    by_id: Dict[int, Dict[str, Any]] = {}
+    for i, s in enumerate(spans):
+        if not isinstance(s, dict) or _SPAN_KEYS - set(s):
+            errs.append(f"spans[{i}]: missing keys "
+                        f"{sorted(_SPAN_KEYS - set(s or {}))}")
+            continue
+        if not _num(s["start"]):
+            errs.append(f"spans[{i}]: non-numeric start")
+            continue
+        if s["end"] is None or not _num(s["end"]):
+            errs.append(f"spans[{i}] ({s['name']}): logged span must have "
+                        "a numeric end")
+            continue
+        if s["end"] < s["start"]:
+            errs.append(f"spans[{i}] ({s['name']}): end {s['end']!r} < "
+                        f"start {s['start']!r}")
+        if s["kind"] == "event" and s["end"] != s["start"]:
+            errs.append(f"spans[{i}] ({s['name']}): event must be an "
+                        "instant (end == start)")
+        by_id[s["span_id"]] = s
+    # nesting: a child must lie within its parent's bounds (the parent may
+    # have been dropped from the ring — only check when it's present)
+    for s in spans:
+        if not isinstance(s, dict):
+            continue
+        parent = by_id.get(s.get("parent_id"))
+        if parent is None or parent.get("end") is None:
+            continue
+        if (s["start"] < parent["start"] - _ATTRIBUTION_EPS
+                or s["end"] > parent["end"] + _ATTRIBUTION_EPS):
+            errs.append(
+                f"span {s['span_id']} ({s['name']}): "
+                f"[{s['start']}, {s['end']}] outside parent "
+                f"{parent['span_id']} [{parent['start']}, {parent['end']}]")
+    return errs
+
+
+def validate_document(doc: Dict[str, Any]) -> List[str]:
+    """Dispatch on the ``schema`` field."""
+    schema = doc.get("schema") if isinstance(doc, dict) else None
+    if schema == METRICS_SCHEMA:
+        return validate_report(doc)
+    if schema == TRACE_SCHEMA:
+        return validate_trace(doc)
+    return [f"unknown schema {schema!r}; expected {METRICS_SCHEMA!r} or "
+            f"{TRACE_SCHEMA!r}"]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.metrics.validate",
+        description="Validate repro.metrics/v1 reports and repro.trace/v1 "
+                    "span logs (dispatched on the schema field).")
+    p.add_argument("files", nargs="+", help="JSON documents to validate")
+    return p
+
+
+def main(argv=None) -> int:
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    failed = False
+    for path in args.files:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}")
+            failed = True
+            continue
+        errs = validate_document(doc)
+        if errs:
+            failed = True
+            print(f"FAIL {path}:")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            print(f"OK   {path} ({doc.get('schema')})")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

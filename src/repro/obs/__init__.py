@@ -1,0 +1,14 @@
+"""Observability layer: deterministic span tracing and deadline-budget
+attribution across both serving stacks (DESIGN.md §13).
+
+* ``Tracer`` / ``Span`` / ``SpanLog`` — clock-agnostic span recording with
+  head-based seed-deterministic sampling and bounded memory
+  (``repro.trace/v1``);
+* ``python -m repro.obs.export`` — Chrome ``trace_event`` conversion for
+  flamegraph inspection of any seeded run.
+"""
+
+from repro.obs.tracer import (TRACE_SCHEMA, Span, SpanLog, Tracer,
+                              sample_decision)
+
+__all__ = ["TRACE_SCHEMA", "Span", "SpanLog", "Tracer", "sample_decision"]

@@ -1,0 +1,90 @@
+"""CLI: convert a ``repro.trace/v1`` span log to Chrome ``trace_event``
+JSON, loadable in ``about:tracing`` / Perfetto (DESIGN.md §13).
+
+    PYTHONPATH=src python -m repro.obs.export trace.json -o chrome.json
+
+Every completed span becomes a duration event (``ph: "X"``) on the track
+of its trace id, instant events become ``ph: "i"``, and timestamps are
+converted from seconds (the tracer's clock units) to microseconds (the
+trace_event contract). The conversion is a pure function of the input, so
+exports of byte-identical span logs are byte-identical too.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+from repro.obs.tracer import TRACE_SCHEMA
+
+
+def chrome_trace(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Convert a ``repro.trace/v1`` document to a Chrome trace object."""
+    if doc.get("schema") != TRACE_SCHEMA:
+        raise ValueError(
+            f"not a {TRACE_SCHEMA} document: schema={doc.get('schema')!r}")
+    events: List[Dict[str, Any]] = [
+        {"ph": "M", "name": "process_name", "pid": 1, "tid": 0,
+         "args": {"name": "repro serving"}},
+    ]
+    for s in doc.get("spans", []):
+        args = dict(s.get("attrs") or {})
+        if s.get("budget_s") is not None:
+            args["budget_s"] = s["budget_s"]
+        base = {
+            "name": s["name"],
+            "cat": s["component"],
+            "pid": 1,
+            # one track per trace: a query's whole lifecycle reads as one
+            # lane in the flamegraph (trace 0 holds global events)
+            "tid": s["trace_id"],
+            "ts": s["start"] * 1e6,
+            "args": args,
+        }
+        if s.get("kind") == "event":
+            events.append({**base, "ph": "i", "s": "t"})
+        else:
+            end = s["end"] if s.get("end") is not None else s["start"]
+            events.append({**base, "ph": "X",
+                           "dur": max(0.0, (end - s["start"]) * 1e6)})
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"schema": doc["schema"],
+                          "sample_rate": doc.get("sample_rate"),
+                          "seed": doc.get("seed"),
+                          "dropped": doc.get("dropped")}}
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.export",
+        description="Convert a repro.trace/v1 span log to Chrome "
+                    "trace_event JSON (about:tracing / Perfetto).")
+    p.add_argument("trace", help="path to a repro.trace/v1 JSON file "
+                                 "(--trace-out of the run CLIs)")
+    p.add_argument("-o", "--out", default=None,
+                   help="write the Chrome trace here instead of stdout")
+    return p
+
+
+def main(argv=None) -> int:
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    with open(args.trace) as f:
+        doc = json.load(f)
+    try:
+        out = chrome_trace(doc)
+    except ValueError as e:
+        parser.error(str(e))
+    text = json.dumps(out, sort_keys=True, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,9 +50,14 @@ class PipelineExecutor:
                  cache_size: int = 4096, use_cache: bool = True,
                  seed: int = 0, admission=None, router=None,
                  metrics=None, service_priors: Optional[Dict[str, float]] = None,
-                 replan_every: int = 64, aimd_kwargs: Optional[dict] = None):
+                 replan_every: int = 64, aimd_kwargs: Optional[dict] = None,
+                 tracer=None):
         self.graph = graph
         self.slo = slo
+        # span tracing (repro.obs, DESIGN.md §13): the tracer is shared
+        # with the underlying Clipper, so stage jobs' queue/service spans
+        # nest under the stage spans opened here
+        self.tracer = tracer
         self.replan_every = replan_every
         missing = [m for m in graph.model_ids() if m not in models]
         if missing:
@@ -84,7 +89,7 @@ class PipelineExecutor:
         self.clip = Clipper(sets, Exp4Policy(sorted(sets)), slo=slo,
                             cache_size=cache_size, use_cache=use_cache,
                             seed=seed, metrics=metrics, router=router,
-                            admission=admission)
+                            admission=admission, tracer=tracer)
         self.metrics = self.clip.metrics
         self._pseq = itertools.count()
         self._inflight: Dict[int, dict] = {}
@@ -106,9 +111,16 @@ class PipelineExecutor:
         pid = next(self._pseq)
         self.metrics.inc(M.QUERIES_SUBMITTED)
         self.metrics.mark(at)
+        trace = None
+        if self.tracer is not None:
+            # root span: the whole pipeline walk; budget = the full SLO
+            trace = self.tracer.start_trace(
+                "pipeline", "pipeline", at, budget_s=self.slo,
+                attrs={"pid": pid})
         entry = {"x": x, "arrival": at, "outputs": {}, "done_stages": set(),
                  "launched": set(), "prefix": dict(self.split.prefix),
-                 "done": False}
+                 "done": False, "trace": trace,
+                 "stage_spans": {}, "stage_times": {}}
         self._inflight[pid] = entry
         for stage in self.graph.roots():
             entry["launched"].add(stage.name)
@@ -164,13 +176,24 @@ class PipelineExecutor:
     # ------------------------------------------------------------------
     def _launch_stage(self, pid: int, stage: Stage) -> None:
         entry = self._inflight[pid]
+        # stage clock-in: launches are synchronous at the last parent's
+        # resolution, so chained (start, end) pairs tile the pipeline's
+        # critical path exactly — the attribution walk relies on this
+        if entry.get("trace") is not None:
+            entry["stage_times"][stage.name] = self.clip.now
         outs = {p: entry["outputs"][p] for p in stage.parents}
         if stage.gate is not None:
             if not stage.gate(outs):
                 self.metrics.inc(M.PIPELINE_STAGES_SKIPPED)
+                if entry.get("trace") is not None:
+                    self.tracer.event(entry["trace"], f"skip:{stage.name}",
+                                      "pipeline.gate", self.clip.now)
                 self._stage_done(pid, stage, None)
                 return
             self.metrics.inc(M.PIPELINE_ESCALATIONS)
+            if entry.get("trace") is not None:
+                self.tracer.event(entry["trace"], f"escalate:{stage.name}",
+                                  "pipeline.gate", self.clip.now)
         xin = stage.prepare_input(entry["x"], outs)
         if not stage.model_ids:
             # pure combine node: resolves synchronously, costs nothing
@@ -179,6 +202,17 @@ class PipelineExecutor:
             return
         self.metrics.inc(M.PIPELINE_STAGE_JOBS)
         deadline = entry["arrival"] + entry["prefix"][stage.name]
+        span = None
+        if entry.get("trace") is not None:
+            # stage span budget: this stage's slice of the prefix deadlines
+            # the query was admitted under (the planner's share at submit)
+            budget = entry["prefix"][stage.name] - max(
+                [entry["prefix"].get(p, 0.0) for p in stage.parents]
+                or [0.0])
+            span = self.tracer.start_span(
+                entry["trace"], stage.name, "pipeline.stage", self.clip.now,
+                budget_s=budget, attrs={"models": list(stage.model_ids)})
+            entry["stage_spans"][stage.name] = span
 
         def finalize(preds, missing, at_deadline,
                      pid=pid, stage=stage, xin=xin, outs=outs):
@@ -187,10 +221,16 @@ class PipelineExecutor:
             self._stage_done(pid, stage, y)
 
         self.clip.submit_stage(stage.model_ids, xin, deadline=deadline,
-                               finalize=finalize)
+                               finalize=finalize, trace_parent=span)
 
     def _stage_done(self, pid: int, stage: Stage, y: Any) -> None:
         entry = self._inflight[pid]
+        if entry.get("trace") is not None:
+            start = entry["stage_times"].get(stage.name, self.clip.now)
+            entry["stage_times"][stage.name] = (start, self.clip.now)
+            span = entry["stage_spans"].pop(stage.name, None)
+            if span is not None:
+                self.tracer.end_span(span, self.clip.now, empty=y is None)
         entry["outputs"][stage.name] = y
         entry["done_stages"].add(stage.name)
         if stage.name == self.graph.output:
@@ -210,20 +250,50 @@ class PipelineExecutor:
             # every tier shed or straggled away: the pipeline has no answer
             self.metrics.inc(M.QUERIES_SHED)
             self.shed_qids.add(pid)
+            if entry.get("trace") is not None:
+                self.tracer.end_trace(entry["trace"], self.clip.now,
+                                      status="shed")
             return
         latency = self.clip.now - entry["arrival"]
+        if entry.get("trace") is not None:
+            self._end_pipeline_trace(entry, latency)
         self.metrics.mark(self.clip.now)
         self.metrics.inc(M.QUERIES_COMPLETED)
         self.metrics.observe_latency(latency)
         conf = float(y.get("confidence", 1.0)) if isinstance(y, dict) else 1.0
         self.results[pid] = Prediction(pid, y, conf, latency=latency)
 
+    def _end_pipeline_trace(self, entry: dict, latency: float) -> None:
+        """Exact latency attribution (DESIGN.md §13): walk the critical
+        path backwards from the output stage, at each step following the
+        parent that resolved last. Stage launches are synchronous at the
+        last parent's resolution, so the chained stage durations partition
+        ``latency`` exactly — one ``pipeline.stage.<name>`` component per
+        critical stage, fractions summing to 1."""
+        attribution = None
+        if latency > 0:
+            times = entry["stage_times"]
+            attribution = {}
+            name = self.graph.output
+            while name is not None:
+                start, end = times[name]
+                comp = f"pipeline.stage.{name}"
+                attribution[comp] = attribution.get(comp, 0.0) + (end - start)
+                parents = [p for p in self.graph.stages[name].parents
+                           if isinstance(times.get(p), tuple)]
+                name = (max(parents, key=lambda p: (times[p][1], p))
+                        if parents else None)
+        self.tracer.end_trace(entry["trace"], self.clip.now,
+                              attribution=attribution)
+
     # ------------------------------------------------------------------
     # reporting
     # ------------------------------------------------------------------
     def report(self) -> Dict[str, Any]:
         """Shared-schema report plus a ``pipeline`` section (graph shape,
-        live SLO split, stage-job accounting)."""
+        live SLO split, stage-job accounting); with a tracer attached it
+        also gains ``latency_attribution`` and a ``trace`` summary (same
+        contract as ``Clipper.report``)."""
         rep = self.metrics.report("pipeline")
         jobs = self.metrics.counter(M.PIPELINE_STAGE_JOBS)
         skipped = self.metrics.counter(M.PIPELINE_STAGES_SKIPPED)
@@ -243,6 +313,9 @@ class PipelineExecutor:
             "stages_degraded": self.metrics.counter(
                 M.PIPELINE_STAGES_DEGRADED),
         }
+        if self.tracer is not None:
+            rep["latency_attribution"] = self.tracer.attribution_report()
+            rep["trace"] = self.tracer.summary()
         return rep
 
     def report_json(self, **extra: Any) -> str:

@@ -53,6 +53,13 @@ def build_parser() -> argparse.ArgumentParser:
                         "(cascade/fanout only)")
     p.add_argument("--report-out", default=None,
                    help="write the JSON report here instead of stdout")
+    p.add_argument("--trace-out", default=None,
+                   help="record per-query spans (repro.obs) and write the "
+                        "repro.trace/v1 span log here — byte-identical per "
+                        "seed; convert with python -m repro.obs.export")
+    p.add_argument("--trace-sample-rate", type=float, default=1.0,
+                   help="head-based trace sampling rate in [0, 1] "
+                        "(default 1.0; only meaningful with --trace-out)")
     return p
 
 
@@ -76,17 +83,26 @@ def main(argv=None) -> int:
                      f"peak rate {sc.peak_rate:g}")
     if sc.pool < 0:
         parser.error("--pool must be >= 0")
+    tracer = None
+    if args.trace_out:
+        if not 0.0 <= args.trace_sample_rate <= 1.0:
+            parser.error("--trace-sample-rate must be in [0, 1]")
+        from repro.obs import Tracer
+        tracer = Tracer(sample_rate=args.trace_sample_rate, seed=sc.seed)
     if args.scenario == "lmcascade":
         if not args.use_cache:
             parser.error("--no-cache applies to the frontend pipelines "
                          "only (lmcascade has no intermediate-result cache)")
         thr = 0.9 if args.threshold is None else args.threshold
-        rep = run_lmcascade(sc, threshold=thr)
+        rep = run_lmcascade(sc, threshold=thr, tracer=tracer)
     else:
         thr = CASCADE_THRESHOLD if args.threshold is None else args.threshold
         rep = run_pipeline(sc, args.scenario, threshold=thr,
-                           use_cache=args.use_cache)
+                           use_cache=args.use_cache, tracer=tracer)
     text = json.dumps(rep, sort_keys=True, indent=2)
+    if args.trace_out:
+        with open(args.trace_out, "w") as f:
+            f.write(tracer.to_json() + "\n")
     if args.report_out:
         with open(args.report_out, "w") as f:
             f.write(text + "\n")

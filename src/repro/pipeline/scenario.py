@@ -147,7 +147,7 @@ def build_graph(kind: str, *, threshold: float = CASCADE_THRESHOLD
 def build_executor(scenario: Scenario, kind: str = "cascade", *,
                    threshold: float = CASCADE_THRESHOLD,
                    admission=None, router=None, use_cache: bool = True,
-                   zoo=None) -> PipelineExecutor:
+                   zoo=None, tracer=None) -> PipelineExecutor:
     """``zoo``: a prebuilt ``pipeline_models(scenario)`` tuple, so callers
     that also need the models (replica factories) construct them once."""
     models, lat, priors, _ = zoo if zoo is not None else \
@@ -157,17 +157,17 @@ def build_executor(scenario: Scenario, kind: str = "cascade", *,
         slo=scenario.slo, latency_models=lat, replicas=scenario.replicas,
         batch_delay=scenario.batch_delay, seed=scenario.seed,
         service_priors=priors, admission=admission, router=router,
-        use_cache=use_cache)
+        use_cache=use_cache, tracer=tracer)
 
 
 def run_pipeline(scenario: Scenario, kind: str = "cascade", *,
                  threshold: float = CASCADE_THRESHOLD,
-                 use_cache: bool = True) -> Dict[str, Any]:
+                 use_cache: bool = True, tracer=None) -> Dict[str, Any]:
     """Replay the scenario's trace through a pipeline and report — the
     pipeline counterpart of ``ScenarioRunner.run`` (byte-identical JSON per
     seed)."""
     ex = build_executor(scenario, kind, threshold=threshold,
-                        use_cache=use_cache)
+                        use_cache=use_cache, tracer=tracer)
     trace = T.query_trace(scenario.arrival_times(), scenario.seed,
                           d_feat=D_FEAT, pool=scenario.pool)
     ex.replay(trace)
@@ -178,8 +178,8 @@ def run_pipeline(scenario: Scenario, kind: str = "cascade", *,
 
 
 def run_lmcascade(scenario: Scenario, *, threshold: float = 0.9,
-                  draft_admission=None,
-                  verify_admission=None) -> Dict[str, Any]:
+                  draft_admission=None, verify_admission=None,
+                  tracer=None) -> Dict[str, Any]:
     """Draft-then-verify across two calibrated-simulation LM engines: the
     draft engine decodes every prompt with a cheap service model; drafts
     that fail the distinct-token confidence check re-decode on the verify
@@ -211,16 +211,18 @@ def run_lmcascade(scenario: Scenario, *, threshold: float = 0.9,
         return sm
 
     clock = VirtualClock()
+    # one tracer spans both tiers: a draft request and its escalated verify
+    # re-decode appear as two traces on one shared timeline
     draft = LMServer(model, mesh, rules, slots=s.slots, max_len=64,
                      slo=s.slo, temperature=0.0, seed=s.seed, clock=clock,
                      service_model=service_model(1.0), model_id="draft",
                      metrics=MetricsRegistry(s.slo),
-                     admission_control=draft_admission)
+                     admission_control=draft_admission, tracer=tracer)
     verify = LMServer(model, mesh, rules, slots=s.slots, max_len=64,
                       slo=s.slo, temperature=0.0, seed=s.seed + 1,
                       clock=clock, service_model=service_model(4.0),
                       model_id="verify", metrics=MetricsRegistry(s.slo),
-                      admission_control=verify_admission)
+                      admission_control=verify_admission, tracer=tracer)
     casc = LMCascade(draft, verify, escalate=make_escalate(threshold),
                      slo=s.slo)
     rng = np.random.default_rng(s.seed)

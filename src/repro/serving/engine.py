@@ -30,6 +30,7 @@ the tail percentiles deliberately keep. Calibrated-simulation mode
 
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -44,6 +45,7 @@ from repro.core import metrics as M
 from repro.core.metrics import MetricsRegistry
 from repro.distributed.sharding import sharding_context
 from repro.models.api import Model
+from repro.models.common import get_attention_backend
 from repro.serving.sampler import sample
 
 # Calibrated-simulation hook (DESIGN.md §8): maps ("prefill", batch, tokens)
@@ -66,6 +68,11 @@ class Request:
     slot: Optional[int] = None
     prefill_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # span tracing (repro.obs): the request's root span, plus the exact
+    # phase boundaries latency attribution partitions the SLO budget along
+    trace: Optional[Any] = None
+    dispatch_time: Optional[float] = None     # left the queue for prefill
+    prefill_end: Optional[float] = None       # prefill done, decode begins
 
 
 def make_fused_decode_fn(model: Model, mesh, rules, *, temperature: float,
@@ -145,7 +152,8 @@ class LMServer:
                  model_id: str = "lm", admission_control=None,
                  fused: bool = True, prefill_slo_frac: float = 0.5,
                  pad_prompts: Optional[bool] = None,
-                 on_finish: Optional[Callable[["Request"], None]] = None):
+                 on_finish: Optional[Callable[["Request"], None]] = None,
+                 tracer=None):
         self.model = model
         self.mesh = mesh
         self.rules = rules
@@ -165,6 +173,8 @@ class LMServer:
                 "one timeline")
         self.model_id = model_id
         self.metrics = metrics if metrics is not None else MetricsRegistry(slo)
+        # span tracing (repro.obs, DESIGN.md §13): None = tracing off
+        self.tracer = tracer
         # SLO-aware admission control (repro.cluster.admission): consulted
         # per submit; rejected requests are shed before they touch the
         # queue. Distinct from ``self.admission``, the AIMD *batch-size*
@@ -239,13 +249,24 @@ class LMServer:
         at = self.clock() if now is None else now
         self.metrics.inc(M.QUERIES_SUBMITTED)
         self.metrics.mark(at)
+        trace = None
+        if self.tracer is not None:
+            # root span: the request's whole lifecycle; budget = full SLO
+            trace = self.tracer.start_trace(
+                "request", "lm", at, budget_s=self.slo,
+                attrs={"rid": rid, "prompt_len": int(len(prompt)),
+                       "max_new": max_new_tokens})
         if (self.admission_control is not None
                 and not self.admission_control.admit_lm(self, at)):
             self.metrics.inc(M.QUERIES_SHED)
             self.shed += 1
+            if self.tracer is not None:
+                self.tracer.event(trace, "shed", "lm.admission", at)
+                self.tracer.end_trace(trace, at, status="shed")
             return rid              # shed — never queued, never completes
-        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                   max_new_tokens, at))
+        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens, at)
+        req.trace = trace
+        self._queue.append(req)
         return rid
 
     def est_request_service(self) -> float:
@@ -278,6 +299,12 @@ class LMServer:
     def _prefill_jit(self, b: int, plen: int, padded: bool):
         key = (b, plen, padded)
         if key not in self._prefill_cache:
+            if self.tracer is not None:
+                # compile events mark the cold-start tail wall-clock mode
+                # pays per new (batch, length) shape (module docstring)
+                self.tracer.global_event(
+                    "compile", "engine.prefill", self.clock(),
+                    attrs={"batch": b, "prompt_len": plen, "padded": padded})
             if padded:
                 def fn(params, tokens, lengths):
                     with sharding_context(self.mesh, self.rules):
@@ -356,6 +383,19 @@ class LMServer:
         self.metrics.inc(M.QUERIES_SUBMITTED, n, model=self.model_id)
         self._observe_batch(n, dt)
         self.metrics.mark(self.clock())
+        if self.tracer is not None:
+            # queue span: arrival -> dispatch; prefill span: the batch's
+            # service interval, budgeted at the prefill share of the SLO
+            for r in batch:
+                r.dispatch_time = t0
+                r.prefill_end = t0 + dt
+                if r.trace is not None:
+                    self.tracer.add_span(r.trace, "queue", "lm.queue",
+                                         r.arrival_time, t0)
+                    self.tracer.add_span(
+                        r.trace, "prefill", "lm.prefill", t0, t0 + dt,
+                        budget_s=self.slo * self.prefill_slo_frac,
+                        attrs={"batch": n, "padded_len": int(plen)})
         self.rng, k = jax.random.split(self.rng)
         first = sample(logits, k, temperature=self.temperature)
         first_np = np.asarray(first)
@@ -461,6 +501,25 @@ class LMServer:
         r.finish_time = self.clock()
         self.completed[r.request_id] = r
         del self._active[s]
+        if self.tracer is not None and r.trace is not None:
+            # decode span: per-step work aggregated into one interval from
+            # prefill end to completion; the attribution is an exact
+            # partition queue + prefill + decode == end-to-end latency
+            self.tracer.add_span(
+                r.trace, "decode", "lm.decode", r.prefill_end, r.finish_time,
+                budget_s=self.slo * (1.0 - self.prefill_slo_frac),
+                attrs={"tokens": len(r.tokens)})
+            latency = r.finish_time - r.arrival_time
+            attribution = None
+            if latency > 0:
+                attribution = {
+                    "lm.queue": r.dispatch_time - r.arrival_time,
+                    "lm.prefill": r.prefill_end - r.dispatch_time,
+                    "lm.decode": r.finish_time - r.prefill_end,
+                }
+            self.tracer.end_trace(r.trace, r.finish_time,
+                                  attribution=attribution,
+                                  attrs={"tokens": len(r.tokens)})
         # tagged per-model so multi-model cluster reports can separate LM
         # completions from frontend ones
         self.metrics.inc_both(M.QUERIES_COMPLETED, model=self.model_id)
@@ -509,13 +568,44 @@ class LMServer:
             "prefill_dispatches": self.prefill_dispatches,
         }
 
+    def engine_report(self) -> Dict[str, Any]:
+        """Engine-level observability counters (DESIGN.md §11 hot path):
+        where XLA compiles happened, how chatty the decode loop is with the
+        host, and which attention backend the decode step traced with."""
+        return {
+            "fused": self.fused,
+            "attention_backend": get_attention_backend(),
+            "prefill": {
+                "dispatches": self.prefill_dispatches,
+                "compiled_shapes": self.prefill_compiles,
+                # ladder rungs actually compiled: [batch, prompt_len, padded]
+                "shapes": [list(k) for k in sorted(self._prefill_cache)],
+            },
+            "decode": {
+                "steps": self.decode_steps,
+                "host_syncs": self.decode_host_syncs,
+                "host_syncs_per_step": (
+                    self.decode_host_syncs / self.decode_steps
+                    if self.decode_steps else 0.0),
+            },
+        }
+
     def report(self) -> Dict[str, Any]:
         """Canonical telemetry report (metrics.py schema, shared with the
-        Clipper frontend)."""
-        return self.metrics.report("lmserver")
+        Clipper frontend), plus the engine-level ``engine`` section; with a
+        tracer attached it also gains ``latency_attribution`` and a
+        ``trace`` summary (same contract as ``Clipper.report``)."""
+        rep = self.metrics.report("lmserver")
+        rep["engine"] = self.engine_report()
+        if self.tracer is not None:
+            rep["latency_attribution"] = self.tracer.attribution_report()
+            rep["trace"] = self.tracer.summary()
+        return rep
 
     def report_json(self, **extra: Any) -> str:
-        return self.metrics.report_json("lmserver", **extra)
+        rep = self.report()
+        rep.update(extra)
+        return json.dumps(rep, sort_keys=True, indent=2)
 
 
 def _scatter_cache(cache, pcache, src: int, dst: int):

@@ -42,6 +42,13 @@ def build_parser() -> argparse.ArgumentParser:
                    help="write the JSON report here instead of stdout "
                         "(--out kept as an alias; --report-out is the flag "
                         "shared with python -m repro.cluster.run)")
+    p.add_argument("--trace-out", default=None,
+                   help="record per-query spans (repro.obs) and write the "
+                        "repro.trace/v1 span log here — byte-identical per "
+                        "seed; convert with python -m repro.obs.export")
+    p.add_argument("--trace-sample-rate", type=float, default=1.0,
+                   help="head-based trace sampling rate in [0, 1] "
+                        "(default 1.0; only meaningful with --trace-out)")
     return p
 
 
@@ -65,7 +72,16 @@ def main(argv=None) -> int:
                      f"peak rate {sc.peak_rate:g}")
     if sc.replicas < 1:
         parser.error("--replicas must be >= 1")
-    text = ScenarioRunner(sc).run_json(args.stack)
+    tracer = None
+    if args.trace_out:
+        if not 0.0 <= args.trace_sample_rate <= 1.0:
+            parser.error("--trace-sample-rate must be in [0, 1]")
+        from repro.obs import Tracer
+        tracer = Tracer(sample_rate=args.trace_sample_rate, seed=sc.seed)
+    text = ScenarioRunner(sc, tracer=tracer).run_json(args.stack)
+    if args.trace_out:
+        with open(args.trace_out, "w") as f:
+            f.write(tracer.to_json() + "\n")
     if args.out:
         with open(args.out, "w") as f:
             f.write(text + "\n")

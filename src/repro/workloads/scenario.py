@@ -135,8 +135,12 @@ class ScenarioRunner:
     """Replays one scenario through a serving stack; ``run`` returns the
     shared-schema report dict, ``run_json`` its stable JSON rendering."""
 
-    def __init__(self, scenario: Scenario):
+    def __init__(self, scenario: Scenario, *, tracer=None):
+        """``tracer``: an optional ``repro.obs.Tracer`` threaded into
+        whichever stack runs — span logs are byte-identical per seed, like
+        the reports."""
         self.scenario = scenario
+        self.tracer = tracer
 
     # -- frontend (discrete-event Clipper) ------------------------------
     def run_frontend(self) -> Dict[str, Any]:
@@ -144,7 +148,8 @@ class ScenarioRunner:
         models, lat = frontend_models(s)
         clip = make_clipper(models, "exp4", slo=s.slo,
                             replicas=s.replicas, latency_models=lat,
-                            batch_delay=s.batch_delay, seed=s.seed)
+                            batch_delay=s.batch_delay, seed=s.seed,
+                            tracer=self.tracer)
         trace = T.query_trace(s.arrival_times(), s.seed, d_feat=D_FEAT,
                               pool=s.pool)
         clip.replay(trace)
@@ -181,7 +186,8 @@ class ScenarioRunner:
         srv = LMServer(model, mesh, rules, slots=s.slots, max_len=64,
                        slo=s.slo, temperature=0.0, seed=s.seed,
                        clock=clock, service_model=service_model,
-                       model_id=cfg.name, admission_control=admission)
+                       model_id=cfg.name, admission_control=admission,
+                       tracer=self.tracer)
         rng = np.random.default_rng(s.seed)
         # open-loop arrivals, thinned to a fixed request count so CLI runs
         # stay cheap; the arrival *process* is the scenario's
@@ -229,11 +235,11 @@ class ScenarioRunner:
         return json.dumps(self.run(stack), sort_keys=True, indent=2)
 
 
-def run_scenario(name: str, stack: str = "frontend",
+def run_scenario(name: str, stack: str = "frontend", *, tracer=None,
                  **overrides: Any) -> Dict[str, Any]:
     """Convenience: look up a named scenario, apply overrides, run it."""
     if name not in SCENARIOS:
         raise KeyError(
             f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
     sc = dataclasses.replace(SCENARIOS[name], **overrides)
-    return ScenarioRunner(sc).run(stack)
+    return ScenarioRunner(sc, tracer=tracer).run(stack)

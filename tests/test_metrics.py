@@ -129,6 +129,21 @@ def test_duration_and_throughput():
     assert m.report("frontend")["throughput_qps"] == pytest.approx(10.0)
 
 
+def test_throughput_null_on_degenerate_mark_span():
+    # no marks: duration 0 — throughput must be null, not a fabricated
+    # division result
+    m = MetricsRegistry(slo=1.0)
+    m.inc(QUERIES_COMPLETED, 5)
+    rep = m.report("frontend")
+    assert rep["duration_s"] == 0.0
+    assert rep["throughput_qps"] is None
+    # a single mark (zero-width span) is equally degenerate
+    m2 = MetricsRegistry(slo=1.0)
+    m2.mark(3.0)
+    m2.inc(QUERIES_COMPLETED, 5)
+    assert m2.report("frontend")["throughput_qps"] is None
+
+
 def test_report_schema_and_cache_rates():
     m = MetricsRegistry(slo=0.02)
     m.inc(CACHE_HITS, 3)

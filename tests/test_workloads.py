@@ -155,7 +155,9 @@ def test_lmserver_scenario_schema_matches_frontend():
     fe = ScenarioRunner(Scenario("t", rate=200.0, duration=0.2)).run("frontend")
     lm = ScenarioRunner(Scenario("t", **_LM)).run("lmserver")
     assert lm["schema"] == fe["schema"]
-    assert set(lm) == set(fe)                     # identical top-level schema
+    # identical top-level schema except the LM-only engine section
+    assert set(lm) - set(fe) == {"engine"}
+    assert set(fe) - set(lm) == set()
     assert set(lm["latency_s"]) == set(fe["latency_s"])
     assert set(lm["slo"]) == set(fe["slo"])
     assert lm["stack"] == "lmserver" and fe["stack"] == "frontend"
