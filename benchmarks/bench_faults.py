@@ -1,0 +1,102 @@
+"""Robustness benchmark: flash-crowd serving through a crash-then-recover
+replica, with the recovery layer (failure detection + requeue + retries +
+hedging, DESIGN.md §14) on versus off.
+
+The fault plan crashes one replica of the hottest model a quarter of the way
+into the flash crowd and brings it back near the end — with recovery off the
+crashed replica is a black hole (its dispatched batches vanish, queued work
+strands, LECT routing keeps feeding its stale estimate), so the run loses
+queries outright. Calibrated discrete-event simulation under a virtual
+clock: every number is a pure function of the seed and the report is
+byte-identical across runs (CI cmp's it).
+
+    PYTHONPATH=src python benchmarks/bench_faults.py --out BENCH_faults.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+FAULTS = ("crash:m0:0@0.25:0.9",)
+
+
+def _arm(rep: dict) -> dict:
+    return {
+        "completed": rep["queries"]["completed"],
+        "submitted": rep["queries"]["submitted"],
+        "slo_attainment": rep["slo"]["attainment"],
+        "p99_ms": rep["latency_s"]["p99"] * 1e3,
+        "faults": rep["faults"],
+    }
+
+
+def run_crash_recover(sc) -> dict:
+    from repro.cluster import ClusterPlan, run_plan
+
+    arms = {}
+    for recovery in (True, False):
+        rep = run_plan(ClusterPlan(scenario=sc, faults=FAULTS,
+                                   recovery=recovery))
+        arms["recovery" if recovery else "no_recovery"] = _arm(rep)
+    healthy = run_plan(ClusterPlan(scenario=sc))
+    arms["healthy"] = _arm(healthy)
+    rec, base = arms["recovery"], arms["no_recovery"]
+    arms["wins"] = {
+        "queries_saved": rec["completed"] - base["completed"],
+        "attainment_gain": rec["slo_attainment"] - base["slo_attainment"],
+        "attainment_vs_healthy":
+            rec["slo_attainment"] - arms["healthy"]["slo_attainment"],
+    }
+    return arms
+
+
+def build_report(seed: int = 0) -> dict:
+    from repro.cluster import cluster_scenario
+
+    sc = cluster_scenario("flash_crowd", seed=seed)
+    return {
+        "bench": "faults",
+        "scenario": dataclasses.asdict(sc),
+        "fault_plan": list(FAULTS),
+        "crash_recover": run_crash_recover(sc),
+    }
+
+
+# -- harness contract (benchmarks/run.py) -----------------------------------
+
+def run(rng: np.random.Generator = None) -> list:
+    rep = build_report()
+    rows = []
+    for name in ("recovery", "no_recovery", "healthy"):
+        r = rep["crash_recover"][name]
+        rows.append({
+            "name": f"faults/crash_recover/{name}",
+            "us_per_call": r["p99_ms"] * 1e3,
+            "derived": (f"attainment={r['slo_attainment']:.3f};"
+                        f"completed={r['completed']}/{r['submitted']}"),
+        })
+    return rows
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here (default: stdout)")
+    args = ap.parse_args(argv)
+    rep = build_report(seed=args.seed)
+    text = json.dumps(rep, sort_keys=True, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    else:
+        print(text)
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -14,8 +14,9 @@ import numpy as np
 
 def main() -> None:
     from benchmarks import (bench_autoscale, bench_batching, bench_cache,
-                            bench_context, bench_ensembles, bench_overhead,
-                            bench_pipeline, bench_scaling, bench_stragglers)
+                            bench_context, bench_ensembles, bench_faults,
+                            bench_overhead, bench_pipeline, bench_scaling,
+                            bench_stragglers)
 
     suites = [
         ("fig3/4/5 batching", bench_batching),
@@ -27,6 +28,7 @@ def main() -> None:
         ("sec4.2 cache", bench_cache),
         ("control plane", bench_autoscale),
         ("pipelines", bench_pipeline),
+        ("faults", bench_faults),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -44,8 +44,10 @@ def expected_delay(rs: ReplicaSet, now: float,
     """Expected queueing + service delay for a query enqueued now — the
     best (earliest) expected completion across routable replicas."""
     # deliberately narrower than ReplicaSet.candidates(): when every replica
-    # has failed, the expected delay is infinite and the query should shed,
-    # not be estimated against a dead slot
+    # has failed (statically, or marked down by the failure detector —
+    # DESIGN.md §14), the expected delay is infinite and a finite margin
+    # never admits — the query sheds rather than being estimated against
+    # the dead fallback slot candidates() would still enqueue on
     cands = rs.routable() or rs.healthy()
     if not cands:
         return float("inf")

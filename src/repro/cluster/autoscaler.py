@@ -90,7 +90,13 @@ class Autoscaler:
         est = self.rs.mean_service()
         if est <= 0.0:
             return cfg.min_replicas            # no signal yet
-        backlog = sum(len(self.rs.queues[i]) for i in self.rs.routable())
+        # every non-retired slot's queue counts: work stranded on a crashed
+        # (detector-failed) replica is still demand the survivors must
+        # absorb, so lost capacity re-provisions instead of hiding the
+        # backlog (DESIGN.md §14). For healthy runs this matches the old
+        # routable-only sum — draining queues are empty post-requeue.
+        backlog = sum(len(q) for i, q in enumerate(self.rs.queues)
+                      if not self.rs.retired[i])
         slo = self.slo() if callable(self.slo) else self.slo
         drain = cfg.drain_target if cfg.drain_target is not None else slo
         n_rate = math.ceil(lam * est / cfg.utilization_cap)

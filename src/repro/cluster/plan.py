@@ -20,13 +20,14 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.cluster.admission import SloAdmission
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
 from repro.cluster.router import make_router
+from repro.faults import FaultPlan, RecoveryPolicy, attach_faults
 from repro.core.containers import JaxModelContainer, linear_latency
 from repro.core.frontend import make_clipper
 from repro.workloads import traces as T
@@ -66,6 +67,13 @@ class ClusterPlan:
     down_ticks: int = 4
     cooldown_ticks: int = 12        # quiescent ticks so scale-down settles
     admission_margin: float = 1.0
+    # fault injection + recovery (repro.faults, DESIGN.md §14): spec
+    # strings attached to the scenario's replicas at build time, seeded by
+    # the scenario seed. ``recovery`` arms the frontend's failure detector
+    # + hedged retries; with faults but no recovery the run is the
+    # collapse baseline bench_faults measures against.
+    faults: Tuple[str, ...] = ()
+    recovery: bool = True
 
     def autoscaler_config(self) -> AutoscalerConfig:
         return AutoscalerConfig(
@@ -156,6 +164,17 @@ def _cluster_section(plan: ClusterPlan, autoscalers: List[Autoscaler],
     }
 
 
+def _apply_faults(plan: ClusterPlan, clip) -> None:
+    """Attach the plan's fault specs to the stack's replica sets (seeded by
+    the scenario seed) and arm recovery on the frontend event loop."""
+    if plan.faults:
+        attach_faults(clip.replica_sets,
+                      FaultPlan.from_specs(plan.faults,
+                                           seed=plan.scenario.seed))
+    if plan.faults and plan.recovery:
+        clip.recovery = RecoveryPolicy()
+
+
 def _run_frontend(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
     s = plan.scenario
     models, lat = frontend_models(s)
@@ -166,6 +185,7 @@ def _run_frontend(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
                         latency_models=lat, batch_delay=s.batch_delay,
                         seed=s.seed, router=make_router(plan.router),
                         admission=admission, tracer=tracer)
+    _apply_faults(plan, clip)
     autoscalers: List[Autoscaler] = []
     if plan.autoscale:
         factory = replica_factory(s, models)
@@ -198,6 +218,7 @@ def _run_pipeline(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
     ex = build_executor(s, "cascade", admission=admission,
                         router=make_router(plan.router), zoo=zoo,
                         tracer=tracer)
+    _apply_faults(plan, ex.clip)
     autoscalers: List[Autoscaler] = []
     if plan.autoscale:
         factory = pipeline_replica_factory(s, zoo[0])
@@ -220,6 +241,12 @@ def _run_pipeline(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
 
 def _run_lmserver(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
     s = plan.scenario
+    if plan.faults:
+        # replica-oriented fault specs have no target here: the LM stack
+        # models faults per-request (serving.engine faults=RequestFaults)
+        raise ValueError("fault plans apply to the frontend/pipeline "
+                         "stacks; the lmserver stack takes "
+                         "RequestFaults on the engine")
     admission = (SloAdmission(policy=plan.admission,
                               margin=plan.admission_margin)
                  if plan.admission else None)

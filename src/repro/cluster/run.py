@@ -20,6 +20,7 @@ import sys
 from repro.cluster.admission import POLICIES
 from repro.cluster.plan import ClusterPlan, cluster_scenario, run_plan_json
 from repro.cluster.router import ROUTERS
+from repro.faults import parse_fault
 from repro.workloads.scenario import SCENARIOS
 
 
@@ -56,6 +57,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="control period in virtual seconds")
     p.add_argument("--max-replicas", type=int, default=8,
                    help="autoscaler ceiling per model")
+    p.add_argument("--fault", action="append", default=[], metavar="SPEC",
+                   help="inject a fault (repeatable; DESIGN.md §14): "
+                        "crash:<model>:<replica>@<at>[:<recover_at>], "
+                        "flaky:<model>:<replica>:<p>, or "
+                        "slow:<model>:<replica>:<factor>[@<from>:<until>]")
+    p.add_argument("--no-recovery", dest="recovery", action="store_false",
+                   help="disable failure detection + hedged retries (the "
+                        "collapse baseline; only meaningful with --fault)")
     p.add_argument("--report-out", default=None,
                    help="write the JSON report here instead of stdout")
     p.add_argument("--trace-out", default=None,
@@ -97,10 +106,18 @@ def main(argv=None) -> int:
         parser.error("--replicas must be >= 1")
     if args.tick <= 0:
         parser.error("--tick must be > 0")
+    for spec in args.fault:
+        try:
+            parse_fault(spec)
+        except ValueError as e:
+            parser.error(str(e))
+    if args.fault and args.stack == "lmserver":
+        parser.error("--fault applies to the frontend/pipeline stacks")
     plan = ClusterPlan(scenario=sc, stack=args.stack,
                        autoscale=args.autoscale, admission=args.admission,
                        router=args.router, tick=args.tick,
-                       max_replicas=args.max_replicas)
+                       max_replicas=args.max_replicas,
+                       faults=tuple(args.fault), recovery=args.recovery)
     tracer = None
     if args.trace_out:
         if not 0.0 <= args.trace_sample_rate <= 1.0:

@@ -18,7 +18,7 @@ from __future__ import annotations
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -190,20 +190,28 @@ class BatchQueue:
     def put(self, query: Query) -> None:
         self._q.append(query)
 
-    def requeue_to(self, other: "BatchQueue") -> int:
+    def requeue_to(self, other: "BatchQueue",
+                   keep: Optional[Callable[[Query], bool]] = None) -> int:
         """Hand every queued query to another queue, merge-ordered by
         arrival time (drain support: a retiring replica gives its backlog to
         a live one without dropping or reordering work). Returns the number
-        of queries moved."""
+        of queries moved.
+
+        ``keep`` filters the drain (failure recovery, DESIGN.md §14): only
+        queries it accepts move; the rest — already finalized or shed, so
+        recomputing them is pure waste — are dropped with the dead
+        replica."""
         if other is self:
             return 0
-        moved = len(self._q)
+        mine = list(self._q) if keep is None else \
+            [q for q in self._q if keep(q)]
+        moved = len(mine)
         if moved:
-            merged = sorted(list(other._q) + list(self._q),
+            merged = sorted(list(other._q) + mine,
                             key=lambda q: (q.arrival_time, q.query_id))
             other._q.clear()
             other._q.extend(merged)
-            self._q.clear()
+        self._q.clear()
         return moved
 
     def __len__(self) -> int:

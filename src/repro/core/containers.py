@@ -23,6 +23,21 @@ from repro.core.batching import AIMDController, BatchQueue, bucket
 
 LatencyModel = Callable[[int], float]    # batch_size -> service seconds
 
+
+class ContainerFault(RuntimeError):
+    """A dispatched batch did not produce predictions (DESIGN.md §14)."""
+
+
+class ContainerCrashed(ContainerFault):
+    """The replica process is down: the batch is *silently lost* — no error
+    response ever comes back, only a missed completion a failure detector
+    can notice."""
+
+
+class TransientError(ContainerFault):
+    """The replica answered the batch with an error (fail-fast): the work is
+    lost but the caller learns immediately and may retry."""
+
 # Default-stream spawner for latency models constructed without an explicit
 # rng: every call takes its own child of this seed sequence, so two
 # independently-constructed containers draw *independent* jitter/straggler
@@ -74,14 +89,29 @@ class JaxModelContainer:
         self.bucket_cap = bucket_cap
         self.stats = ContainerStats()
         self.fail = fail            # health: failed containers are skipped
+        self.faults = None          # Optional[ReplicaFaults] — DESIGN.md §14
 
     def pred_batch(self, inputs: Sequence[Any]) -> List[Any]:
         ys, _ = self.pred_batch_timed(inputs)
         return ys
 
-    def pred_batch_timed(self, inputs: Sequence[Any]):
+    def pred_batch_timed(self, inputs: Sequence[Any],
+                         now: Optional[float] = None):
         """Returns (outputs, service_time). service_time is measured when no
-        latency model is installed, modeled otherwise."""
+        latency model is installed, modeled otherwise.
+
+        With a fault model attached (``self.faults``) and a dispatch time,
+        the batch is subject to injected failures: ``ContainerCrashed`` when
+        the replica is down at dispatch or crashes mid-service (the batch is
+        silently lost), ``TransientError`` on a seeded per-batch error roll
+        (fail-fast), and latency-degradation multipliers on the modeled
+        service time. Every raised fault increments ``stats.failures``."""
+        if self.faults is not None and now is not None:
+            try:
+                self.faults.check_dispatch(now)
+            except ContainerFault:
+                self.stats.failures += 1
+                raise
         n = len(inputs)
         x = np.stack([np.asarray(v) for v in inputs])
         nb = bucket(n, cap=self.bucket_cap)
@@ -93,6 +123,13 @@ class JaxModelContainer:
         measured = time.perf_counter() - t0
         service = (self.latency_model(n) if self.latency_model is not None
                    else measured)
+        if self.faults is not None and now is not None:
+            service *= self.faults.multiplier(now)
+            try:
+                self.faults.check_service(now, service)
+            except ContainerFault:
+                self.stats.failures += 1
+                raise
         self.stats.batches += 1
         self.stats.queries += n
         self.stats.busy_time += service
@@ -127,6 +164,13 @@ class ReplicaSet:
         self.free_at = [0.0 for _ in replicas]
         self.draining = [False for _ in replicas]
         self.retired = [False for _ in replicas]
+        # failure detection / recovery state (DESIGN.md §14): replica
+        # indices the frontend's detector has marked unhealthy (fail=True)
+        # and may later clear via probe_recovered. has_faults flags that a
+        # fault plan is attached so hot paths can skip fault handling
+        # entirely when the set is guaranteed healthy.
+        self.suspected: set = set()
+        self.has_faults = False
 
     def attach_metrics(self, metrics) -> None:
         """Point every queue (current or replaced) at a shared registry —
@@ -207,6 +251,34 @@ class ReplicaSet:
                 self.draining[i] = False
                 self.retired[i] = True
 
+    # -- fault injection + recovery (DESIGN.md §14) ---------------------
+    def set_faults(self, ri: int, faults) -> None:
+        """Install a per-replica fault model (``repro.faults.ReplicaFaults``)
+        on an existing replica slot."""
+        self.replicas[ri].faults = faults
+        self.has_faults = True
+
+    def probe_recovered(self, now: float) -> List[int]:
+        """Health-probe detector-suspected replicas; clear the ``fail`` mark
+        on any whose fault window has passed and return the rejoined
+        indices. Only detector-marked replicas are probed — a static
+        ``fail=True`` the harness set by hand is never overridden."""
+        rejoined = []
+        for ri in sorted(self.suspected):
+            if self.retired[ri]:
+                self.suspected.discard(ri)
+                continue
+            f = self.replicas[ri].faults
+            if f is None or not f.crashed(now):
+                self.replicas[ri].fail = False
+                self.suspected.discard(ri)
+                # the replica restarts idle: stale busy-until estimates from
+                # before the crash must not keep repelling (or attracting)
+                # traffic
+                self.free_at[ri] = float(now)
+                rejoined.append(ri)
+        return rejoined
+
     def est_service(self, ri: int, default: float = 0.0) -> float:
         """Observed mean service seconds per query for one replica (its
         cumulative busy time over queries served) — the per-replica stat
@@ -241,4 +313,6 @@ class ReplicaSet:
             "queued": len(self.queues[i]),
             "draining": self.draining[i],
             "retired": self.retired[i],
+            "failures": r.stats.failures,
+            "failed": r.fail,
         } for i, r in enumerate(self.replicas)]

@@ -25,9 +25,16 @@ import numpy as np
 
 from repro.core.batching import AIMDController, BatchQueue
 from repro.core.cache import PredictionCache
-from repro.core.containers import JaxModelContainer, ReplicaSet
+from repro.core.containers import (ContainerCrashed, JaxModelContainer,
+                                   ReplicaSet, TransientError)
 from repro.core.interfaces import Feedback, Prediction, Query
-from repro.core.metrics import (MetricsRegistry, PIPELINE_STAGES_DEGRADED,
+from repro.core.metrics import (FAULTS_CRASHES, FAULTS_DETECTED,
+                                FAULTS_HEDGE_WINS, FAULTS_HEDGES,
+                                FAULTS_RECOVERED, FAULTS_REQUEUED,
+                                FAULTS_RETRIES, FAULTS_RETRY_EXHAUSTED,
+                                FAULTS_SLOW, FAULTS_TRANSIENT,
+                                MetricsRegistry, MODEL_FAILURES,
+                                PIPELINE_STAGES_DEGRADED,
                                 PIPELINE_STAGES_SHED, QUERIES_COMPLETED,
                                 QUERIES_ROUTED, QUERIES_SUBMITTED)
 from repro.core.selection import Exp3Policy, Exp4Policy
@@ -38,7 +45,8 @@ from repro.core.straggler import assemble_preds, record_stragglers
 class _Event:
     at: float
     seq: int
-    kind: str = field(compare=False)          # 'complete' | 'deadline'
+    # 'complete' | 'deadline' | 'timeout' | 'hedge' | 'retry'
+    kind: str = field(compare=False)
     payload: Any = field(compare=False, default=None)
 
 
@@ -52,10 +60,15 @@ class Clipper:
                  use_cache: bool = True,
                  metrics: Optional[MetricsRegistry] = None,
                  router: Optional[Callable[[ReplicaSet, float], int]] = None,
-                 admission=None, tracer=None):
+                 admission=None, tracer=None, recovery=None):
         self.replica_sets = replica_sets
         self.policy = policy
         self.slo = slo
+        # failure detection + hedged-retry recovery (repro.faults,
+        # DESIGN.md §14): None = recovery off. With no fault plan attached
+        # either, dispatch takes the exact original path — zero per-query
+        # overhead.
+        self.recovery = recovery
         # control-plane hooks (repro.cluster, DESIGN.md §10): ``router``
         # maps (replica_set, now) -> replica index for each enqueue;
         # ``admission`` may narrow or reject the chosen ensemble per query
@@ -81,6 +94,14 @@ class Clipper:
         self._events: List[_Event] = []
         self._eseq = itertools.count()
         self._qseq = itertools.count()
+        # in-flight batch registry for the failure detector: bid ->
+        # {mid, ri, batch, at, done}. Only populated in recovery mode.
+        self._batches: Dict[int, dict] = {}
+        self._bseq = itertools.count()
+        # (mid, ri) -> virtual time a recovery probe last cleared the
+        # replica: timeouts of batches dispatched before that are stale
+        # evidence and must not re-condemn the recovered replica
+        self._cleared: Dict[Tuple[str, int], float] = {}
         self.now = 0.0
         self._pending: Dict[int, dict] = {}     # qid -> bookkeeping
         self.results: Dict[int, Prediction] = {}
@@ -245,8 +266,17 @@ class Clipper:
                 self._on_complete(**ev.payload)
             elif ev.kind == "deadline":
                 self._on_deadline(ev.payload)
+            elif ev.kind == "timeout":
+                self._on_timeout(ev.payload)
+            elif ev.kind == "hedge":
+                self._on_hedge(ev.payload)
+            elif ev.kind == "retry":
+                self._on_retry(*ev.payload)
 
     def _dispatch_ready(self) -> None:
+        recovering = self.recovery is not None
+        if recovering:
+            self._probe_recovered()
         progressed = True
         while progressed:
             progressed = False
@@ -260,6 +290,10 @@ class Clipper:
                     batch = queue.next_batch(self.now)
                     if not batch:
                         continue
+                    if recovering or rs.has_faults:
+                        self._dispatch_fault_aware(mid, rs, ri, queue, batch)
+                        progressed = True
+                        continue
                     outs, service = rs.replicas[ri].pred_batch_timed(
                         [q.x for q in batch])
                     done_at = self.now + service
@@ -272,6 +306,238 @@ class Clipper:
                         mid=mid, ri=ri, batch=batch, outs=outs,
                         service=service, size=len(batch)))
                     progressed = True
+
+    # ------------------------------------------------------------------
+    # fault handling (repro.faults, DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def _dispatch_fault_aware(self, mid: str, rs: ReplicaSet, ri: int,
+                              queue: BatchQueue,
+                              batch: List[Query]) -> None:
+        """Dispatch one batch on a replica that may crash, error, or run
+        degraded. Failure semantics: a crash *silently loses* the batch
+        (no completion event — only the armed timeout can notice), a
+        transient error fails fast (retries schedule immediately), and a
+        successful dispatch arms the detector timeout plus (optionally) a
+        straggler hedge."""
+        pol = self.recovery
+        faults = rs.replicas[ri].faults
+        if (faults is not None
+                and faults.multiplier(self.now) != 1.0):
+            self.metrics.inc_both(FAULTS_SLOW, model=mid)
+        # arm-time thresholds come from *pre-dispatch* history: the
+        # container's synchronous stats update would otherwise leak this
+        # very batch's (possibly degraded) service time into the estimate,
+        # inflating the detector/hedge deadlines it is supposed to police
+        detect_in = (self._detect_after(rs, ri, len(batch), pol)
+                     if pol is not None else 0.0)
+        hedge_in = (self._hedge_after(rs, ri, len(batch), pol)
+                    if pol is not None and pol.hedge else 0.0)
+        try:
+            outs, service = rs.replicas[ri].pred_batch_timed(
+                [q.x for q in batch], now=self.now)
+        except ContainerCrashed:
+            self.metrics.inc_both(FAULTS_CRASHES, model=mid)
+            self.metrics.inc_both(MODEL_FAILURES, model=mid)
+            self._close_queue_spans(mid, batch)
+            if self.tracer is not None:
+                self.tracer.global_event(
+                    "fault.crash", "faults", self.now,
+                    attrs={"model": mid, "replica": ri,
+                           "queries": len(batch)})
+            if pol is not None:
+                bid = next(self._bseq)
+                self._batches[bid] = dict(mid=mid, ri=ri, batch=batch,
+                                          at=self.now, done=False)
+                self._push(self.now + detect_in, "timeout", bid)
+            return
+        except TransientError:
+            self.metrics.inc_both(FAULTS_TRANSIENT, model=mid)
+            self.metrics.inc_both(MODEL_FAILURES, model=mid)
+            self._close_queue_spans(mid, batch)
+            if self.tracer is not None:
+                self.tracer.global_event(
+                    "fault.transient", "faults", self.now,
+                    attrs={"model": mid, "replica": ri,
+                           "queries": len(batch)})
+            if pol is not None:
+                # fail-fast: the error response arrives immediately, so
+                # retries back off from *now* rather than from detection
+                self._schedule_retries(mid, batch)
+            return
+        done_at = self.now + service
+        rs.free_at[ri] = done_at
+        if self.tracer is not None:
+            self._trace_dispatch(mid, ri, batch, done_at,
+                                 getattr(queue.controller, "slo", None))
+        bid = None
+        if pol is not None:
+            bid = next(self._bseq)
+            self._batches[bid] = dict(mid=mid, ri=ri, batch=batch,
+                                      at=self.now, done=False)
+            self._push(self.now + detect_in, "timeout", bid)
+            if pol.hedge:
+                self._push(self.now + hedge_in, "hedge", bid)
+        self._push(done_at, "complete", dict(
+            mid=mid, ri=ri, batch=batch, outs=outs, service=service,
+            size=len(batch), bid=bid))
+
+    def _close_queue_spans(self, mid: str, batch: Sequence[Query]) -> None:
+        """A failed dispatch still pulled the batch out of its queue: close
+        the queue spans (truncated) so every started span ends. A later
+        retry opens a fresh one."""
+        if self.tracer is None:
+            return
+        for q in batch:
+            entry = self._pending.get(q.query_id)
+            if entry is None or entry.get("trace") is None:
+                continue
+            self.tracer.end_span(entry["tqueue"].pop(mid, None), self.now,
+                                 truncated=True)
+
+    def _detect_after(self, rs: ReplicaSet, ri: int, size: int,
+                      pol) -> float:
+        """Detector timeout for a batch of ``size`` dispatched now: a
+        generous multiple of the batch's *expected completion* (per-query
+        service estimate × batch size — est_service is per query, service
+        is per batch), floored so cold replicas (no history) are not
+        instantly condemned."""
+        floor = pol.min_timeout if pol.min_timeout is not None else self.slo
+        return max(pol.detect_factor * rs.est_service(ri, 0.0) * size, floor)
+
+    def _hedge_after(self, rs: ReplicaSet, ri: int, size: int,
+                     pol) -> float:
+        floor = (pol.hedge_min if pol.hedge_min is not None
+                 else self.slo / 2.0)
+        return max(pol.hedge_factor * rs.est_service(ri, 0.0) * size, floor)
+
+    def _probe_recovered(self) -> None:
+        """Health-probe suspected replicas each dispatch round; recovered
+        ones rejoin routing. While a suspected replica stays down, any work
+        stranded on its queue (router fallback under total failure) drains
+        to a live replica as soon as one exists."""
+        for mid, rs in self.replica_sets.items():
+            if not rs.suspected:
+                continue
+            for ri in rs.probe_recovered(self.now):
+                self._cleared[(mid, ri)] = self.now
+                self.metrics.inc_both(FAULTS_RECOVERED, model=mid)
+                if self.tracer is not None:
+                    self.tracer.global_event(
+                        "fault.recovered", "faults", self.now,
+                        attrs={"model": mid, "replica": ri})
+            for ri in sorted(rs.suspected):
+                if rs.queues[ri]:
+                    self._drain_suspect(mid, rs, ri)
+
+    def _drain_suspect(self, mid: str, rs: ReplicaSet, ri: int) -> None:
+        targets = [i for i in rs.routable() if i != ri]
+        if not targets:
+            return
+        tgt = min(targets, key=lambda i: (len(rs.queues[i]), i))
+        moved = rs.queues[ri].requeue_to(rs.queues[tgt],
+                                         keep=self._query_live)
+        if moved:
+            self.metrics.inc_both(FAULTS_REQUEUED, n=moved, model=mid)
+
+    def _query_live(self, q: Query) -> bool:
+        entry = self._pending.get(q.query_id)
+        return entry is not None and not entry["done"]
+
+    def _on_timeout(self, bid: int) -> None:
+        """A dispatched batch missed its expected completion: declare the
+        replica down (out of routing until a health probe clears it), drain
+        its queued backlog to a live replica, and retry the lost queries."""
+        rec = self._batches.pop(bid, None)
+        if rec is None or rec["done"]:
+            return
+        mid, ri = rec["mid"], rec["ri"]
+        rs = self.replica_sets[mid]
+        stale = rec["at"] < self._cleared.get((mid, ri), float("-inf"))
+        if not stale and not rs.replicas[ri].fail:   # first detection wins
+            rs.replicas[ri].fail = True
+            rs.suspected.add(ri)
+            self.metrics.inc_both(FAULTS_DETECTED, model=mid)
+            if self.tracer is not None:
+                self.tracer.global_event(
+                    "fault.detected", "faults", self.now,
+                    attrs={"model": mid, "replica": ri})
+            self._drain_suspect(mid, rs, ri)
+        self._schedule_retries(mid, rec["batch"])
+
+    def _schedule_retries(self, mid: str, batch: Sequence[Query]) -> None:
+        """Re-dispatch lost queries under the per-query per-model retry
+        budget with exponential backoff; exhausted queries are left to
+        straggler mitigation (render without the model at the deadline)."""
+        pol = self.recovery
+        if pol is None:
+            return
+        for q in batch:
+            entry = self._pending.get(q.query_id)
+            if (entry is None or entry["done"]
+                    or mid in entry["preds"] or mid not in entry["need"]):
+                continue
+            tries = entry.setdefault("retries", {})
+            n = tries.get(mid, 0)
+            if n >= pol.max_retries:
+                self.metrics.inc_both(FAULTS_RETRY_EXHAUSTED, model=mid)
+                if self.tracer is not None and entry.get("trace") is not None:
+                    self.tracer.event(entry["trace"], "retry_exhausted",
+                                      "frontend.fault", self.now,
+                                      attrs={"model": mid, "attempts": n})
+                continue
+            tries[mid] = n + 1
+            self._push(self.now + pol.backoff_base * (2 ** n), "retry",
+                       (mid, q.query_id))
+
+    def _on_retry(self, mid: str, qid: int) -> None:
+        entry = self._pending.get(qid)
+        if entry is None or entry["done"] or mid in entry["preds"]:
+            return
+        self.metrics.inc_both(FAULTS_RETRIES, model=mid)
+        q: Query = entry["query"]
+        ri = self._route(mid, q)
+        if self.tracer is not None and entry.get("trace") is not None:
+            self.tracer.event(entry["trace"], "retry", "frontend.fault",
+                              self.now, attrs={"model": mid, "replica": ri,
+                                               "attempt":
+                                               entry["retries"][mid]})
+            old = entry["tqueue"].pop(mid, None)
+            self.tracer.end_span(old, self.now, truncated=True)
+            entry["tqueue"][mid] = self.tracer.start_span(
+                entry["trace"], "queue", "frontend.queue", self.now,
+                attrs={"model": mid, "replica": ri, "retry": True})
+
+    def _on_hedge(self, bid: int) -> None:
+        """The batch outlived its hedge threshold but is not (yet) presumed
+        dead: re-enqueue its unanswered queries once on the best alternate
+        replica; whichever copy completes first wins."""
+        rec = self._batches.get(bid)
+        if rec is None or rec["done"]:
+            return
+        mid, ri = rec["mid"], rec["ri"]
+        rs = self.replica_sets[mid]
+        alts = [i for i in rs.routable() if i != ri]
+        if not alts:
+            return
+        alt = min(alts, key=lambda i: (rs.expected_completion(i, self.now),
+                                       len(rs.queues[i]), i))
+        for q in rec["batch"]:
+            entry = self._pending.get(q.query_id)
+            if (entry is None or entry["done"] or mid in entry["preds"]
+                    or mid in entry.get("hedge_from", {})):
+                continue            # one hedge per query per model
+            entry.setdefault("hedge_from", {})[mid] = ri
+            rs.queues[alt].put(q)
+            self.metrics.inc_both(FAULTS_HEDGES, model=mid)
+            if self.tracer is not None and entry.get("trace") is not None:
+                self.tracer.event(entry["trace"], "hedge", "frontend.fault",
+                                  self.now,
+                                  attrs={"model": mid, "from": ri,
+                                         "to": alt})
+                if entry["tqueue"].get(mid) is None:
+                    entry["tqueue"][mid] = self.tracer.start_span(
+                        entry["trace"], "queue", "frontend.queue", self.now,
+                        attrs={"model": mid, "replica": alt, "hedge": True})
 
     def _trace_dispatch(self, mid: str, ri: int, batch: Sequence[Query],
                         done_at: float, budget: Optional[float]) -> None:
@@ -288,18 +554,40 @@ class Clipper:
                 entry["trace"], "service", "frontend.service", self.now,
                 done_at, budget_s=budget,
                 attrs={"model": mid, "replica": ri, "batch": len(batch)})
-            entry.setdefault("tdisp", {})[mid] = self.now
-            entry.setdefault("tdone", {})[mid] = done_at
+            if mid not in entry["preds"]:
+                # a hedged duplicate dispatching after the primary already
+                # answered must not overwrite the winner's timestamps —
+                # attribution walks the *used* prediction's critical path
+                entry.setdefault("tdisp", {})[mid] = self.now
+                entry.setdefault("tdone", {})[mid] = done_at
 
-    def _on_complete(self, mid, ri, batch, outs, service, size) -> None:
+    def _on_complete(self, mid, ri, batch, outs, service, size,
+                     bid=None) -> None:
+        if bid is not None:
+            rec = self._batches.pop(bid, None)
+            if rec is not None:
+                rec["done"] = True
         rs = self.replica_sets[mid]
         rs.queues[ri].record(size, service)
+        recovering = self.recovery is not None
         for q, y in zip(batch, outs):
             if self.cache is not None:
                 self.cache.put(mid, q.x, y)
             entry = self._pending.get(q.query_id)
             if entry is None or entry["done"]:
                 continue                      # already straggler-finalized
+            if recovering:
+                if mid in entry["preds"]:
+                    continue          # first result won; drop the duplicate
+                hedged_from = entry.get("hedge_from", {}).get(mid)
+                if hedged_from is not None and hedged_from != ri:
+                    self.metrics.inc_both(FAULTS_HEDGE_WINS, model=mid)
+                if entry.get("trace") is not None:
+                    # the winner's timestamps, whichever copy it was —
+                    # keeps queue + service + straggler_wait == latency
+                    # exact even when a hedge beats its primary
+                    entry.setdefault("tdisp", {})[mid] = self.now - service
+                    entry.setdefault("tdone", {})[mid] = self.now
             entry["preds"][mid] = y
             self._maybe_finalize(entry)
 
@@ -314,7 +602,11 @@ class Clipper:
         if self.tracer is not None and entry.get("trace") is not None:
             self.tracer.event(entry["trace"], "deadline", "frontend.slo",
                               self.now)
-        if entry["preds"]:
+        if entry["preds"] or entry.get("finalize") is not None:
+            # stage jobs finalize at the deadline with whatever arrived —
+            # possibly nothing (every model crashed with its retries
+            # exhausted): the executor must learn the stage failed rather
+            # than wait forever on a completion that cannot come
             self._finalize(entry, at_deadline=True)
 
     def _maybe_finalize(self, entry) -> None:

@@ -47,6 +47,19 @@ PIPELINE_STAGES_SKIPPED = "pipeline.stages_skipped"  # gated off (cascade)
 PIPELINE_ESCALATIONS = "pipeline.escalations"    # gated stages that ran
 PIPELINE_STAGES_SHED = "pipeline.stages_shed"    # stage jobs admission shed
 PIPELINE_STAGES_DEGRADED = "pipeline.stages_degraded"  # stage jobs narrowed
+PIPELINE_STAGES_FAILED = "pipeline.stages_failed"  # every model of a stage lost
+# fault injection + recovery (DESIGN.md §14)
+FAULTS_CRASHES = "faults.crashes"            # batches lost to crashed replicas
+FAULTS_TRANSIENT = "faults.transient_errors"  # fail-fast batch errors
+FAULTS_SLOW = "faults.slow_batches"          # batches under degraded latency
+MODEL_FAILURES = "faults.failures"           # per-container failure total
+FAULTS_DETECTED = "faults.detected"          # detector marked replica down
+FAULTS_RECOVERED = "faults.recovered"        # probed replica rejoined routing
+FAULTS_REQUEUED = "faults.requeued_queries"  # drained off a dead replica
+FAULTS_RETRIES = "faults.retries"            # per-query re-dispatches
+FAULTS_RETRY_EXHAUSTED = "faults.retry_exhausted"  # budget spent, gave up
+FAULTS_HEDGES = "faults.hedges"              # hedged duplicate dispatches
+FAULTS_HEDGE_WINS = "faults.hedge_wins"      # hedge finished before primary
 BATCHES = "batches.dispatched"
 LATENCY = "latency_s"          # end-to-end query latency histogram
 SERVICE = "service_s"          # per-batch model service time histogram
@@ -304,6 +317,22 @@ class MetricsRegistry:
                 "partial_queries": self.counter(STRAGGLER_PARTIAL),
                 "dropped_models": self.counter(STRAGGLER_DROPPED),
             },
+            # always present (all-zero when no fault plan is attached) so
+            # the report key set is schema-stable across healthy and
+            # faulted runs
+            "faults": {
+                "crashes": self.counter(FAULTS_CRASHES),
+                "transient_errors": self.counter(FAULTS_TRANSIENT),
+                "slow_batches": self.counter(FAULTS_SLOW),
+                "failures": self.counter(MODEL_FAILURES),
+                "detected": self.counter(FAULTS_DETECTED),
+                "recovered": self.counter(FAULTS_RECOVERED),
+                "requeued_queries": self.counter(FAULTS_REQUEUED),
+                "retries": self.counter(FAULTS_RETRIES),
+                "retry_exhausted": self.counter(FAULTS_RETRY_EXHAUSTED),
+                "hedges": self.counter(FAULTS_HEDGES),
+                "hedge_wins": self.counter(FAULTS_HEDGE_WINS),
+            },
             "per_model": {
                 m: {
                     "queries": self.counter(QUERIES_SUBMITTED, model=m),
@@ -320,6 +349,12 @@ class MetricsRegistry:
                     "batches": self.counter(BATCHES, model=m),
                     "service_s": self._hist_summary(SERVICE, model=m),
                     "batch_size": self._hist_summary(BATCH_SIZE, model=m),
+                    # fault handling (DESIGN.md §14): injected failures this
+                    # model's containers raised, plus the recovery work
+                    # (re-dispatches, hedged duplicates) spent on it
+                    "failures": self.counter(MODEL_FAILURES, model=m),
+                    "retries": self.counter(FAULTS_RETRIES, model=m),
+                    "hedges": self.counter(FAULTS_HEDGES, model=m),
                 }
                 for m in self._models()
             },

@@ -34,6 +34,21 @@ def assemble_preds(model_ids: Sequence[str], preds: Dict[str, Any]
     return jnp.asarray(np.stack(rows)), jnp.asarray(available)
 
 
+def render_without(model_ids: Sequence[str], preds: Dict[str, Any],
+                   without: Sequence[str]) -> np.ndarray:
+    """The ensemble answer rendered as if ``without`` models never replied —
+    the degraded output a query falls back to when a model's replicas have
+    failed past their retry budget (DESIGN.md §14). Pure function of the
+    surviving predictions: averaging only the available rows (the masked
+    mean ``assemble_preds`` callers compute), so repeated renders from the
+    same survivors are deterministic."""
+    kept = {m: p for m, p in preds.items() if m not in set(without)}
+    mat, avail = assemble_preds(model_ids, kept)
+    mask = avail.reshape((-1,) + (1,) * (mat.ndim - 1))
+    y = jnp.where(mask, mat, 0.0).sum(axis=0) / jnp.maximum(avail.sum(), 1)
+    return np.asarray(y)
+
+
 def agreement_confidence(preds_matrix: jnp.ndarray,
                          available: jnp.ndarray) -> float:
     """Fraction of available models that agree with the plurality vote."""

@@ -1,0 +1,8 @@
+"""Fault injection and recovery policy (DESIGN.md §14)."""
+
+from repro.faults.plan import (FaultPlan, FaultSpec, RecoveryPolicy,
+                               ReplicaFaults, RequestFaults, attach_faults,
+                               parse_fault)
+
+__all__ = ["FaultPlan", "FaultSpec", "RecoveryPolicy", "ReplicaFaults",
+           "RequestFaults", "attach_faults", "parse_fault"]

@@ -32,7 +32,10 @@ from repro.obs.tracer import TRACE_SCHEMA
 _HIST_KEYS = {"count", "sum", "mean", "min", "max", "p50", "p95", "p99"}
 _REPORT_KEYS = {"schema", "stack", "duration_s", "queries", "throughput_qps",
                 "latency_s", "slo", "admission", "cache", "batch_size",
-                "queue_depth", "stragglers", "per_model"}
+                "queue_depth", "stragglers", "faults", "per_model"}
+_FAULT_KEYS = {"crashes", "transient_errors", "slow_batches", "failures",
+               "detected", "recovered", "requeued_queries", "retries",
+               "retry_exhausted", "hedges", "hedge_wins"}
 _SPAN_KEYS = {"span_id", "trace_id", "parent_id", "name", "component",
               "start", "end", "kind", "budget_s", "attrs"}
 _ATTRIBUTION_EPS = 1e-6
@@ -112,6 +115,15 @@ def validate_report(doc: Dict[str, Any]) -> List[str]:
     if (not isinstance(cache, dict)
             or {"hits", "misses", "hit_rate"} - set(cache)):
         errs.append("cache: must carry hits/misses/hit_rate")
+    faults = doc["faults"]
+    if not isinstance(faults, dict) or _FAULT_KEYS - set(faults):
+        errs.append("faults: must carry "
+                    f"{'/'.join(sorted(_FAULT_KEYS))}")
+    else:
+        bad = [k for k in sorted(_FAULT_KEYS)
+               if not isinstance(faults[k], int) or faults[k] < 0]
+        if bad:
+            errs.append(f"faults: non-negative int required for {bad}")
     pm = doc["per_model"]
     if not isinstance(pm, dict):
         errs.append("per_model: must be an object")

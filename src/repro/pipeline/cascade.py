@@ -108,9 +108,16 @@ class LMCascade:
         if cid is None:
             return
         meta = self._meta[cid]
-        if self.escalate(r):
+        # an injected draft failure (repro.faults.RequestFaults) forces
+        # escalation: the draft answer is unusable, so the verify tier is
+        # the retry path (counted under faults.retries)
+        failed = bool(getattr(r, "failed", False))
+        if failed or self.escalate(r):
             self.escalated += 1
             self.metrics.inc(M.PIPELINE_ESCALATIONS)
+            if failed:
+                self.metrics.inc_both(M.FAULTS_RETRIES,
+                                      model=self.draft.model_id)
             now = self.draft.clock()
             shed0 = self.verify.shed
             rid = self.verify.submit(meta["prompt"],
@@ -123,6 +130,9 @@ class LMCascade:
                 self._complete(cid, r, tier="draft")
                 return
             self._verify_rid_to_cid[rid] = cid
+            # keep the draft answer: if the verify pass itself fails we
+            # degrade to it rather than losing the request
+            meta["draft"] = r
             return
         self.metrics.inc(M.PIPELINE_STAGES_SKIPPED)
         self._complete(cid, r, tier="draft")
@@ -131,11 +141,22 @@ class LMCascade:
         cid = self._verify_rid_to_cid.pop(r.request_id, None)
         if cid is None:
             return
+        draft = self._meta[cid].get("draft")
+        if getattr(r, "failed", False) and draft is not None \
+                and not getattr(draft, "failed", False):
+            # graceful degradation (DESIGN.md §14): a failed verify pass
+            # falls back to the draft answer it was double-checking
+            self.metrics.inc(M.QUERIES_DEGRADED)
+            self._complete(cid, draft, tier="draft", finish=r.finish_time)
+            return
         self._complete(cid, r, tier="verify")
 
-    def _complete(self, cid: int, r: Request, *, tier: str) -> None:
+    def _complete(self, cid: int, r: Request, *, tier: str,
+                  finish: Optional[float] = None) -> None:
         meta = self._meta.pop(cid)
-        finish = r.finish_time if r.finish_time is not None else self.draft.clock()
+        if finish is None:
+            finish = (r.finish_time if r.finish_time is not None
+                      else self.draft.clock())
         latency = finish - meta["arrival"]
         self.metrics.inc(M.QUERIES_COMPLETED)
         self.metrics.observe_latency(latency)

@@ -217,6 +217,11 @@ class PipelineExecutor:
         def finalize(preds, missing, at_deadline,
                      pid=pid, stage=stage, xin=xin, outs=outs):
             record_stragglers(self.metrics, missing)
+            if not preds and missing:
+                # every model of the stage was lost (crashed replicas,
+                # exhausted retries — DESIGN.md §14): the pipeline degrades
+                # to a shed downstream, but the fault is accounted here
+                self.metrics.inc(M.PIPELINE_STAGES_FAILED)
             y = (stage.combine_preds(xin, preds, outs) if preds else None)
             self._stage_done(pid, stage, y)
 
@@ -312,6 +317,8 @@ class PipelineExecutor:
             "stages_shed": self.metrics.counter(M.PIPELINE_STAGES_SHED),
             "stages_degraded": self.metrics.counter(
                 M.PIPELINE_STAGES_DEGRADED),
+            "stages_failed": self.metrics.counter(
+                M.PIPELINE_STAGES_FAILED),
         }
         if self.tracer is not None:
             rep["latency_attribution"] = self.tracer.attribution_report()

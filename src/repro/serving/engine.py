@@ -73,6 +73,10 @@ class Request:
     trace: Optional[Any] = None
     dispatch_time: Optional[float] = None     # left the queue for prefill
     prefill_end: Optional[float] = None       # prefill done, decode begins
+    # injected per-request failure (repro.faults.RequestFaults): the tokens
+    # exist but the answer is unusable — downstream policy (LMCascade)
+    # escalates failed drafts and degrades failed verifies
+    failed: bool = False
 
 
 def make_fused_decode_fn(model: Model, mesh, rules, *, temperature: float,
@@ -153,7 +157,7 @@ class LMServer:
                  fused: bool = True, prefill_slo_frac: float = 0.5,
                  pad_prompts: Optional[bool] = None,
                  on_finish: Optional[Callable[["Request"], None]] = None,
-                 tracer=None):
+                 tracer=None, faults=None):
         self.model = model
         self.mesh = mesh
         self.rules = rules
@@ -185,6 +189,10 @@ class LMServer:
         # completion, after the engine's own bookkeeping — a draft engine's
         # callback decides whether to escalate to a verify engine
         self.on_finish = on_finish
+        # per-request fault injection (repro.faults.RequestFaults): a pure
+        # seeded hash of the request id decides transient failures, so a
+        # faulted LM run stays byte-identical per seed. None = off.
+        self.faults = faults
         # prefill-only service time gets its own latency budget — a fraction
         # of the request SLO — rather than the full SLO, which would bias
         # max_batch high (prefill is only the first leg of a request)
@@ -498,6 +506,13 @@ class LMServer:
 
     def _finish(self, s: int, r: Request) -> None:
         r.done = True
+        if self.faults is not None and self.faults.failed(r.request_id):
+            r.failed = True
+            self.metrics.inc_both(M.FAULTS_TRANSIENT, model=self.model_id)
+            self.metrics.inc_both(M.MODEL_FAILURES, model=self.model_id)
+            if self.tracer is not None and r.trace is not None:
+                self.tracer.event(r.trace, "fault.request_failed",
+                                  "lm.fault", self.clock())
         r.finish_time = self.clock()
         self.completed[r.request_id] = r
         del self._active[s]

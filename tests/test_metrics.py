@@ -159,9 +159,12 @@ def test_report_schema_and_cache_rates():
     assert set(rep) == {"schema", "stack", "duration_s", "queries",
                         "throughput_qps", "latency_s", "slo", "admission",
                         "cache", "batch_size", "queue_depth", "stragglers",
-                        "per_model"}
+                        "faults", "per_model"}
     assert set(rep["slo"]) == {"target_s", "violations", "rate", "attainment"}
     assert set(rep["admission"]) == {"shed", "degraded", "shed_rate"}
+    # the faults section is schema-stable: present and all-zero on a run
+    # with no fault plan attached (DESIGN.md §14)
+    assert set(v for v in rep["faults"].values()) == {0}
 
 
 def test_report_json_stable():
