@@ -87,38 +87,54 @@ class SloAdmission:
         slack = (q.deadline - clip.now) if q.deadline is not None else None
         if slack is None:
             return list(chosen)
-        meetable = [
-            mid for mid in chosen
-            if expected_delay(clip.replica_sets[mid], clip.now,
-                              self.default_service) * self.margin <= slack
-        ]
+        delays = {
+            mid: expected_delay(clip.replica_sets[mid], clip.now,
+                                self.default_service)
+            for mid in chosen
+        }
+        meetable = [mid for mid in chosen
+                    if delays[mid] * self.margin <= slack]
         if self.policy == "shed":
             if meetable or cached:
                 return list(chosen)
             clip.metrics.inc(shed_counter)
-            self._trace(clip, trace_parent, "shed", slack, chosen, [])
+            self._explain(clip, trace_parent, "shed", slack, chosen, [],
+                          delays, shed_counter)
             return []
         if not meetable:
             if cached:
                 clip.metrics.inc(degraded_counter)
-                self._trace(clip, trace_parent, "degrade", slack, chosen, [])
+                self._explain(clip, trace_parent, "degrade", slack, chosen,
+                              [], delays, degraded_counter)
                 return []
             clip.metrics.inc(shed_counter)
-            self._trace(clip, trace_parent, "shed", slack, chosen, [])
+            self._explain(clip, trace_parent, "shed", slack, chosen, [],
+                          delays, shed_counter)
             return []
         if len(meetable) < len(chosen):
             clip.metrics.inc(degraded_counter)
-            self._trace(clip, trace_parent, "degrade", slack, chosen, meetable)
+            self._explain(clip, trace_parent, "degrade", slack, chosen,
+                          meetable, delays, degraded_counter)
         return meetable
 
-    @staticmethod
-    def _trace(clip, parent, verdict: str, slack: float,
-               chosen: Sequence[str], kept: Sequence[str]) -> None:
-        if parent is None or getattr(clip, "tracer", None) is None:
-            return
-        clip.tracer.event(parent, verdict, "frontend.admission", clip.now,
-                          attrs={"slack_s": slack,
-                                 "dropped": sorted(set(chosen) - set(kept))})
+    def _explain(self, clip, parent, verdict: str, slack: float,
+                 chosen: Sequence[str], kept: Sequence[str],
+                 delays, counter: str) -> None:
+        """Record the verdict: instant event on the query's trace (when
+        sampled) and an audit record with the expected-delay evidence."""
+        dropped = sorted(set(chosen) - set(kept))
+        if parent is not None and getattr(clip, "tracer", None) is not None:
+            clip.tracer.event(parent, verdict, "frontend.admission",
+                              clip.now,
+                              attrs={"slack_s": slack, "dropped": dropped})
+        audit = getattr(clip, "audit", None)
+        if audit is not None:
+            audit.record(
+                clip.now, "admission", verdict,
+                evidence={"slack_s": slack, "margin": self.margin,
+                          "expected_delay_s": dict(sorted(delays.items())),
+                          "chosen": list(chosen), "kept": list(kept),
+                          "counter": counter})
 
     # -- LMServer hook (engine.submit) ----------------------------------
     def admit_lm(self, srv, now: float) -> bool:
@@ -129,4 +145,13 @@ class SloAdmission:
             return True                    # no signal yet: admit
         backlog = len(srv._queue)
         wait = (backlog + 1) * est / max(srv.slots, 1)
-        return wait * self.margin <= srv.slo
+        if wait * self.margin <= srv.slo:
+            return True
+        audit = getattr(srv, "audit", None)
+        if audit is not None:
+            audit.record(
+                now, "admission", "shed", model=srv.model_id,
+                evidence={"backlog": backlog, "est_service_s": est,
+                          "expected_wait_s": wait, "slo_s": srv.slo,
+                          "margin": self.margin, "slots": srv.slots})
+        return False

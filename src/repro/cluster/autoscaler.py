@@ -65,13 +65,14 @@ class Autoscaler:
     def __init__(self, rs: ReplicaSet,
                  make_replica: Callable[[str], JaxModelContainer],
                  metrics: MetricsRegistry, cfg: AutoscalerConfig, *,
-                 slo: float):
+                 slo: float, audit=None):
         assert cfg.min_replicas >= 1
         self.rs = rs
         self.make_replica = make_replica
         self.metrics = metrics
         self.cfg = cfg
         self.slo = slo
+        self.audit = audit              # optional repro.obs AuditLog
         self.model_id = rs.model_id
         self._last_routed = metrics.counter(M.QUERIES_ROUTED,
                                             model=self.model_id)
@@ -86,10 +87,13 @@ class Autoscaler:
         """Deterministic replica target — a pure function of the arrival
         rate ``lam`` (routed qps over the last tick) and the replica set's
         current backlog + service stats."""
+        return self._target(lam)[0]
+
+    def _target(self, lam: float) -> tuple:
+        """(want, evidence): the replica target plus the decision-time
+        inputs that produced it, recorded verbatim into the audit log."""
         cfg = self.cfg
         est = self.rs.mean_service()
-        if est <= 0.0:
-            return cfg.min_replicas            # no signal yet
         # every non-retired slot's queue counts: work stranded on a crashed
         # (detector-failed) replica is still demand the survivors must
         # absorb, so lost capacity re-provisions instead of hiding the
@@ -97,12 +101,21 @@ class Autoscaler:
         # routable-only sum — draining queues are empty post-requeue.
         backlog = sum(len(q) for i, q in enumerate(self.rs.queues)
                       if not self.rs.retired[i])
+        evidence: Dict[str, Any] = {
+            "lambda": lam, "est_service_s": est, "backlog": backlog,
+        }
+        if est <= 0.0:
+            evidence.update(n_rate=0, n_backlog=0, want=cfg.min_replicas)
+            return cfg.min_replicas, evidence      # no signal yet
         slo = self.slo() if callable(self.slo) else self.slo
         drain = cfg.drain_target if cfg.drain_target is not None else slo
         n_rate = math.ceil(lam * est / cfg.utilization_cap)
         n_backlog = math.ceil(backlog * est / drain) if drain > 0 else 0
-        want = max(n_rate, n_backlog, cfg.min_replicas)
-        return min(want, cfg.max_replicas)
+        want = min(max(n_rate, n_backlog, cfg.min_replicas),
+                   cfg.max_replicas)
+        evidence.update(drain_target_s=drain, n_rate=n_rate,
+                        n_backlog=n_backlog, want=want)
+        return want, evidence
 
     def tick(self, now: float) -> None:
         """One control period: reap finished drains, sample the routed
@@ -113,7 +126,7 @@ class Autoscaler:
         routed = self.metrics.counter(M.QUERIES_ROUTED, model=self.model_id)
         lam = (routed - self._last_routed) / cfg.tick
         self._last_routed = routed
-        want = self.desired(lam)
+        want, evidence = self._target(lam)
         live = self.rs.n_live
         if want > live:
             self._down_streak = 0
@@ -123,6 +136,12 @@ class Autoscaler:
                     self.rs.add_replica(self.make_replica(self.model_id),
                                         now=now)
                     self.metrics.inc(M.REPLICAS_ADDED, model=self.model_id)
+                    if self.audit is not None:
+                        # one record per replica added, so the audit grow
+                        # count equals the report's replicas_added counter
+                        self.audit.record(
+                            now, "autoscaler", "grow", model=self.model_id,
+                            evidence={**evidence, "live": self.rs.n_live})
                 self._up_streak = 0
                 self.events.append({"t": now, "action": "up",
                                     "want": want, "live": self.rs.n_live})
@@ -136,6 +155,13 @@ class Autoscaler:
                          key=lambda i: (self.rs.est_service(i), i))
                 self.rs.retire_replica(ri, now=now)
                 self.metrics.inc(M.REPLICAS_RETIRED, model=self.model_id)
+                if self.audit is not None:
+                    self.audit.record(
+                        now, "autoscaler", "drain", model=self.model_id,
+                        evidence={**evidence, "replica": ri,
+                                  "replica_est_service_s":
+                                      self.rs.est_service(ri),
+                                  "live": self.rs.n_live})
                 self._down_streak = cfg.down_ticks    # stay armed while low
                 self.events.append({"t": now, "action": "down",
                                     "want": want, "live": self.rs.n_live})

@@ -28,6 +28,7 @@ from repro.cluster.admission import SloAdmission
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
 from repro.cluster.router import make_router
 from repro.faults import FaultPlan, RecoveryPolicy, attach_faults
+from repro.core import metrics as M
 from repro.core.containers import JaxModelContainer, linear_latency
 from repro.core.frontend import make_clipper
 from repro.workloads import traces as T
@@ -116,12 +117,14 @@ def replica_factory(scenario: Scenario, models: Dict[str, Any]):
 # ---------------------------------------------------------------------------
 
 def _drive_ticks(serve, submit, trace, autoscalers: List[Autoscaler],
-                 plan: ClusterPlan) -> None:
+                 plan: ClusterPlan, sampler=None) -> None:
     """Tick-driven replay shared by the frontend and pipeline stacks:
     arrivals are interleaved with event processing as in ``Clipper.replay``,
     but the clock is stepped in control periods and every autoscaler
     observes the world at each boundary. ``serve`` needs ``run`` / ``now``
-    (settable) / ``pending``; ``submit(x, ctx, at)`` issues one query."""
+    (settable) / ``pending``; ``submit(x, ctx, at)`` issues one query.
+    ``sampler``: an optional ``repro.obs.FleetSampler`` polled after the
+    autoscalers so each sample sees the post-decision fleet state."""
     i, t, idle = 0, 0.0, 0
     while True:
         t += plan.tick
@@ -138,6 +141,8 @@ def _drive_ticks(serve, submit, trace, autoscalers: List[Autoscaler],
             serve.run(until=t)
         for a in autoscalers:
             a.tick(t)
+        if sampler is not None:
+            sampler.sample_until(t)
         if i >= len(trace) and not serve.pending:
             idle += 1
             # end only after the cooldown AND once every autoscaler has
@@ -152,9 +157,26 @@ def _drive_ticks(serve, submit, trace, autoscalers: List[Autoscaler],
             idle = 0
 
 
-def _cluster_section(plan: ClusterPlan, autoscalers: List[Autoscaler],
-                     replica_sets) -> Dict[str, Any]:
+def _decisions_section(metrics, replica_sets, audit=None) -> Dict[str, Any]:
+    """Control-plane decision tallies (DESIGN.md §15): grow/drain counts
+    per model plus shed/degrade totals — derived from the shared counters,
+    so the section is schema-stable whether or not an audit log was
+    attached; with one attached its exact per-action counts ride along."""
     return {
+        "per_model": {
+            mid: {"grow": metrics.counter(M.REPLICAS_ADDED, model=mid),
+                  "drain": metrics.counter(M.REPLICAS_RETIRED, model=mid)}
+            for mid in sorted(replica_sets)},
+        "shed": metrics.counter(M.QUERIES_SHED),
+        "degraded": metrics.counter(M.QUERIES_DEGRADED),
+        "audit": audit.summary() if audit is not None else None,
+    }
+
+
+def _cluster_section(plan: ClusterPlan, autoscalers: List[Autoscaler],
+                     replica_sets, metrics=None,
+                     audit=None) -> Dict[str, Any]:
+    out = {
         "plan": plan.describe(),
         "autoscalers": [a.summary() for a in autoscalers],
         "replica_sets": {mid: {"live": rs.n_live,
@@ -162,6 +184,9 @@ def _cluster_section(plan: ClusterPlan, autoscalers: List[Autoscaler],
                                "replicas": rs.replica_stats()}
                          for mid, rs in sorted(replica_sets.items())},
     }
+    if metrics is not None:
+        out["decisions"] = _decisions_section(metrics, replica_sets, audit)
+    return out
 
 
 def _apply_faults(plan: ClusterPlan, clip) -> None:
@@ -175,7 +200,8 @@ def _apply_faults(plan: ClusterPlan, clip) -> None:
         clip.recovery = RecoveryPolicy()
 
 
-def _run_frontend(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
+def _run_frontend(plan: ClusterPlan, tracer=None, sampler=None,
+                  audit=None) -> Dict[str, Any]:
     s = plan.scenario
     models, lat = frontend_models(s)
     admission = (SloAdmission(policy=plan.admission,
@@ -184,7 +210,7 @@ def _run_frontend(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
     clip = make_clipper(models, "exp4", slo=s.slo, replicas=s.replicas,
                         latency_models=lat, batch_delay=s.batch_delay,
                         seed=s.seed, router=make_router(plan.router),
-                        admission=admission, tracer=tracer)
+                        admission=admission, tracer=tracer, audit=audit)
     _apply_faults(plan, clip)
     autoscalers: List[Autoscaler] = []
     if plan.autoscale:
@@ -192,17 +218,24 @@ def _run_frontend(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
         cfg = plan.autoscaler_config()
         for mid in sorted(clip.replica_sets):
             autoscalers.append(Autoscaler(clip.replica_sets[mid], factory,
-                                          clip.metrics, cfg, slo=s.slo))
+                                          clip.metrics, cfg, slo=s.slo,
+                                          audit=audit))
+    if sampler is not None:
+        sampler.bind(metrics=clip.metrics, tracer=tracer)
+        sampler.add_probe(clip.timeseries_probe)
     trace = T.query_trace(s.arrival_times(), s.seed, d_feat=D_FEAT,
                           pool=s.pool)
     _drive_ticks(clip, lambda x, ctx, at: clip.submit(
-        x, context_id=ctx, arrival_time=at), trace, autoscalers, plan)
+        x, context_id=ctx, arrival_time=at), trace, autoscalers, plan,
+        sampler)
     rep = clip.report()
-    rep["cluster"] = _cluster_section(plan, autoscalers, clip.replica_sets)
+    rep["cluster"] = _cluster_section(plan, autoscalers, clip.replica_sets,
+                                      clip.metrics, audit)
     return rep
 
 
-def _run_pipeline(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
+def _run_pipeline(plan: ClusterPlan, tracer=None, sampler=None,
+                  audit=None) -> Dict[str, Any]:
     """Pipeline stack with per-stage provisioning: every stage model gets
     its own autoscaler whose drain target is the *stage's* share of the
     pipeline SLO (planner split), so a hot verify tier grows independently
@@ -217,7 +250,7 @@ def _run_pipeline(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
     zoo = pipeline_models(s)        # one zoo: executor + replica factory
     ex = build_executor(s, "cascade", admission=admission,
                         router=make_router(plan.router), zoo=zoo,
-                        tracer=tracer)
+                        tracer=tracer, audit=audit)
     _apply_faults(plan, ex.clip)
     autoscalers: List[Autoscaler] = []
     if plan.autoscale:
@@ -229,17 +262,23 @@ def _run_pipeline(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
             stage_slo = (lambda mid=mid:
                          ex.split.shares[ex.stage_of[mid]])
             autoscalers.append(Autoscaler(ex.replica_sets[mid], factory,
-                                          ex.metrics, cfg, slo=stage_slo))
+                                          ex.metrics, cfg, slo=stage_slo,
+                                          audit=audit))
+    if sampler is not None:
+        sampler.bind(metrics=ex.metrics, tracer=tracer)
+        sampler.add_probe(ex.timeseries_probe)
     trace = T.query_trace(s.arrival_times(), s.seed, d_feat=D_FEAT,
                           pool=s.pool)
     _drive_ticks(ex.clip, lambda x, ctx, at: ex.submit(x, arrival_time=at),
-                 trace, autoscalers, plan)
+                 trace, autoscalers, plan, sampler)
     rep = ex.report()
-    rep["cluster"] = _cluster_section(plan, autoscalers, ex.replica_sets)
+    rep["cluster"] = _cluster_section(plan, autoscalers, ex.replica_sets,
+                                      ex.metrics, audit)
     return rep
 
 
-def _run_lmserver(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
+def _run_lmserver(plan: ClusterPlan, tracer=None, sampler=None,
+                  audit=None) -> Dict[str, Any]:
     s = plan.scenario
     if plan.faults:
         # replica-oriented fault specs have no target here: the LM stack
@@ -250,23 +289,32 @@ def _run_lmserver(plan: ClusterPlan, tracer=None) -> Dict[str, Any]:
     admission = (SloAdmission(policy=plan.admission,
                               margin=plan.admission_margin)
                  if plan.admission else None)
-    runner = ScenarioRunner(s, tracer=tracer)
+    runner = ScenarioRunner(s, tracer=tracer, sampler=sampler, audit=audit)
     rep = runner.run_lmserver(admission=admission)
     rep["cluster"] = {"plan": plan.describe(), "autoscalers": [],
-                      "replica_sets": {}}
+                      "replica_sets": {},
+                      "decisions": {
+                          "per_model": {},
+                          "shed": rep["admission"]["shed"],
+                          "degraded": rep["admission"]["degraded"],
+                          "audit": (audit.summary()
+                                    if audit is not None else None)}}
     return rep
 
 
-def run_plan(plan: ClusterPlan, *, tracer=None) -> Dict[str, Any]:
+def run_plan(plan: ClusterPlan, *, tracer=None, sampler=None,
+             audit=None) -> Dict[str, Any]:
     """Execute the plan; returns the shared-schema report with the extra
     ``cluster`` section and trace provenance ``meta``. ``tracer``: an
-    optional ``repro.obs.Tracer`` threaded into the chosen stack."""
+    optional ``repro.obs.Tracer`` threaded into the chosen stack;
+    ``sampler`` / ``audit``: optional ``repro.obs`` FleetSampler /
+    AuditLog, attached the same way (off by default, no hot-path cost)."""
     if plan.stack == "frontend":
-        rep = _run_frontend(plan, tracer)
+        rep = _run_frontend(plan, tracer, sampler, audit)
     elif plan.stack == "lmserver":
-        rep = _run_lmserver(plan, tracer)
+        rep = _run_lmserver(plan, tracer, sampler, audit)
     elif plan.stack == "pipeline":
-        rep = _run_pipeline(plan, tracer)
+        rep = _run_pipeline(plan, tracer, sampler, audit)
     else:
         raise ValueError(f"unknown stack: {plan.stack}")
     rep["scenario"] = dataclasses.asdict(plan.scenario)
@@ -274,6 +322,8 @@ def run_plan(plan: ClusterPlan, *, tracer=None) -> Dict[str, Any]:
     return rep
 
 
-def run_plan_json(plan: ClusterPlan, *, tracer=None) -> str:
+def run_plan_json(plan: ClusterPlan, *, tracer=None, sampler=None,
+                  audit=None) -> str:
     """Stable JSON rendering — byte-identical for identical plans."""
-    return json.dumps(run_plan(plan, tracer=tracer), sort_keys=True, indent=2)
+    return json.dumps(run_plan(plan, tracer=tracer, sampler=sampler,
+                               audit=audit), sort_keys=True, indent=2)

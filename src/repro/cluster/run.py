@@ -21,6 +21,7 @@ from repro.cluster.admission import POLICIES
 from repro.cluster.plan import ClusterPlan, cluster_scenario, run_plan_json
 from repro.cluster.router import ROUTERS
 from repro.faults import parse_fault
+from repro.obs.cli import add_fleet_args, build_fleet, write_fleet
 from repro.workloads.scenario import SCENARIOS
 
 
@@ -74,6 +75,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--trace-sample-rate", type=float, default=1.0,
                    help="head-based trace sampling rate in [0, 1] "
                         "(default 1.0; only meaningful with --trace-out)")
+    add_fleet_args(p)
     return p
 
 
@@ -124,10 +126,12 @@ def main(argv=None) -> int:
             parser.error("--trace-sample-rate must be in [0, 1]")
         from repro.obs import Tracer
         tracer = Tracer(sample_rate=args.trace_sample_rate, seed=sc.seed)
-    text = run_plan_json(plan, tracer=tracer)
+    sampler, audit = build_fleet(args, parser)
+    text = run_plan_json(plan, tracer=tracer, sampler=sampler, audit=audit)
     if args.trace_out:
         with open(args.trace_out, "w") as f:
             f.write(tracer.to_json() + "\n")
+    write_fleet(args, sampler, audit)
     if args.report_out:
         with open(args.report_out, "w") as f:
             f.write(text + "\n")

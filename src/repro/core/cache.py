@@ -138,6 +138,9 @@ class PredictionCache:
         # span tracing (repro.obs): probes annotate the querying trace
         self.tracer = tracer
 
+    def __len__(self) -> int:
+        return len(self.cache)
+
     def key(self, model_id: str, x: Any) -> Hashable:
         return (model_id, digest(x))
 

@@ -28,15 +28,16 @@ from repro.core.cache import PredictionCache
 from repro.core.containers import (ContainerCrashed, JaxModelContainer,
                                    ReplicaSet, TransientError)
 from repro.core.interfaces import Feedback, Prediction, Query
-from repro.core.metrics import (FAULTS_CRASHES, FAULTS_DETECTED,
-                                FAULTS_HEDGE_WINS, FAULTS_HEDGES,
-                                FAULTS_RECOVERED, FAULTS_REQUEUED,
-                                FAULTS_RETRIES, FAULTS_RETRY_EXHAUSTED,
-                                FAULTS_SLOW, FAULTS_TRANSIENT,
-                                MetricsRegistry, MODEL_FAILURES,
-                                PIPELINE_STAGES_DEGRADED,
+from repro.core.metrics import (CACHE_HITS, CACHE_MISSES, FAULTS_CRASHES,
+                                FAULTS_DETECTED, FAULTS_HEDGE_WINS,
+                                FAULTS_HEDGES, FAULTS_RECOVERED,
+                                FAULTS_REQUEUED, FAULTS_RETRIES,
+                                FAULTS_RETRY_EXHAUSTED, FAULTS_SLOW,
+                                FAULTS_TRANSIENT, MetricsRegistry,
+                                MODEL_FAILURES, PIPELINE_STAGES_DEGRADED,
                                 PIPELINE_STAGES_SHED, QUERIES_COMPLETED,
-                                QUERIES_ROUTED, QUERIES_SUBMITTED)
+                                QUERIES_DEGRADED, QUERIES_ROUTED,
+                                QUERIES_SHED, QUERIES_SUBMITTED)
 from repro.core.selection import Exp3Policy, Exp4Policy
 from repro.core.straggler import assemble_preds, record_stragglers
 
@@ -60,7 +61,7 @@ class Clipper:
                  use_cache: bool = True,
                  metrics: Optional[MetricsRegistry] = None,
                  router: Optional[Callable[[ReplicaSet, float], int]] = None,
-                 admission=None, tracer=None, recovery=None):
+                 admission=None, tracer=None, recovery=None, audit=None):
         self.replica_sets = replica_sets
         self.policy = policy
         self.slo = slo
@@ -77,6 +78,12 @@ class Clipper:
         # span tracing (repro.obs, DESIGN.md §13): None = tracing off, no
         # per-query overhead beyond these ``is not None`` checks
         self.tracer = tracer
+        # control-plane decision audit (repro.obs.audit, DESIGN.md §15):
+        # None = off, same zero-overhead discipline as the tracer
+        self.audit = audit
+        # fleet-sampler probe state: previous cumulative counter values,
+        # touched only when a FleetSampler polls timeseries_probe
+        self._ts_prev: Dict[str, float] = {}
         self.metrics = metrics if metrics is not None else MetricsRegistry(slo)
         self.cache = (PredictionCache(cache_size, metrics=self.metrics,
                                       tracer=tracer)
@@ -425,6 +432,9 @@ class Clipper:
                     self.tracer.global_event(
                         "fault.recovered", "faults", self.now,
                         attrs={"model": mid, "replica": ri})
+                if self.audit is not None:
+                    self.audit.record(self.now, "faults", "recover",
+                                      model=mid, evidence={"replica": ri})
             for ri in sorted(rs.suspected):
                 if rs.queues[ri]:
                     self._drain_suspect(mid, rs, ri)
@@ -461,6 +471,12 @@ class Clipper:
                 self.tracer.global_event(
                     "fault.detected", "faults", self.now,
                     attrs={"model": mid, "replica": ri})
+            if self.audit is not None:
+                self.audit.record(
+                    self.now, "faults", "detect", model=mid,
+                    evidence={"replica": ri, "dispatched_at": rec["at"],
+                              "batch": len(rec["batch"]),
+                              "overdue_s": self.now - rec["at"]})
             self._drain_suspect(mid, rs, ri)
         self._schedule_retries(mid, rec["batch"])
 
@@ -495,6 +511,12 @@ class Clipper:
             return
         self.metrics.inc_both(FAULTS_RETRIES, model=mid)
         q: Query = entry["query"]
+        if self.audit is not None:
+            self.audit.record(
+                self.now, "faults", "retry", model=mid,
+                evidence={"qid": qid, "attempt": entry["retries"][mid],
+                          "slack_s": (q.deadline - self.now
+                                      if q.deadline is not None else None)})
         ri = self._route(mid, q)
         if self.tracer is not None and entry.get("trace") is not None:
             self.tracer.event(entry["trace"], "retry", "frontend.fault",
@@ -521,6 +543,7 @@ class Clipper:
             return
         alt = min(alts, key=lambda i: (rs.expected_completion(i, self.now),
                                        len(rs.queues[i]), i))
+        hedged = 0
         for q in rec["batch"]:
             entry = self._pending.get(q.query_id)
             if (entry is None or entry["done"] or mid in entry["preds"]
@@ -528,6 +551,7 @@ class Clipper:
                 continue            # one hedge per query per model
             entry.setdefault("hedge_from", {})[mid] = ri
             rs.queues[alt].put(q)
+            hedged += 1
             self.metrics.inc_both(FAULTS_HEDGES, model=mid)
             if self.tracer is not None and entry.get("trace") is not None:
                 self.tracer.event(entry["trace"], "hedge", "frontend.fault",
@@ -538,6 +562,12 @@ class Clipper:
                     entry["tqueue"][mid] = self.tracer.start_span(
                         entry["trace"], "queue", "frontend.queue", self.now,
                         attrs={"model": mid, "replica": alt, "hedge": True})
+        if hedged and self.audit is not None:
+            self.audit.record(
+                self.now, "faults", "hedge", model=mid,
+                evidence={"from": ri, "to": alt, "queries": hedged,
+                          "batch_age_s": self.now - rec["at"],
+                          "alt_ect_s": rs.expected_completion(alt, self.now)})
 
     def _trace_dispatch(self, mid: str, ri: int, batch: Sequence[Query],
                         done_at: float, budget: Optional[float]) -> None:
@@ -717,6 +747,14 @@ class Clipper:
             ri = self.router(rs, self.now)
         else:
             ri = min(rs.candidates(), key=lambda i: len(rs.queues[i]))
+        if self.audit is not None:
+            # decision-time evidence: the queue the router saw, plus the
+            # router's own prediction when it exposes one (LECT's ect_s)
+            ev = {"replica": ri, "queue_depth": len(rs.queues[ri]),
+                  "free_in_s": max(rs.free_at[ri] - self.now, 0.0)}
+            ev.update(getattr(self.router, "last_attrs", None) or {})
+            self.audit.record(self.now, "router", "pick", model=mid,
+                              evidence=ev)
         rs.queues[ri].put(q)
         self.metrics.inc(QUERIES_ROUTED, model=mid)
         return ri
@@ -751,12 +789,81 @@ class Clipper:
         tot = self._feedback_hits + self._feedback_misses
         return self._feedback_hits / tot if tot else 0.0
 
+    # ------------------------------------------------------------------
+    # fleet telemetry (repro.obs.timeseries, DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def _rate(self, key: str, cur: float, dt: float) -> float:
+        """Per-interval rate from a cumulative counter (probe state)."""
+        prev = self._ts_prev.get(key, 0.0)
+        self._ts_prev[key] = cur
+        return (cur - prev) / dt
+
+    def timeseries_probe(self, now: float, dt: float) -> Dict[str, float]:
+        """FleetSampler probe: one flat gauge snapshot of the frontend's
+        vital signs. Windowed rates (λ, cache hit rate, shed/degrade) are
+        cumulative-counter deltas over the sample interval — the probe is
+        stateful across samples but read-only on the run, so an observed
+        run stays byte-identical to an unobserved one."""
+        m = self.metrics
+        out: Dict[str, float] = {
+            "lambda": self._rate("lambda", m.counter(QUERIES_SUBMITTED), dt),
+            "throughput": self._rate("done", m.counter(QUERIES_COMPLETED),
+                                     dt),
+            "admission.shed_rate": self._rate(
+                "shed", m.counter(QUERIES_SHED), dt),
+            "admission.degrade_rate": self._rate(
+                "degraded", m.counter(QUERIES_DEGRADED), dt),
+        }
+        if self.cache is not None:
+            hits, misses = m.counter(CACHE_HITS), m.counter(CACHE_MISSES)
+            dh = hits - self._ts_prev.get("cache.hits", 0)
+            dm = misses - self._ts_prev.get("cache.misses", 0)
+            self._ts_prev["cache.hits"] = hits
+            self._ts_prev["cache.misses"] = misses
+            out["cache.occupancy"] = float(len(self.cache))
+            out["cache.hit_rate"] = dh / (dh + dm) if (dh + dm) else 0.0
+        for mid, rs in sorted(self.replica_sets.items()):
+            backlog = sum(len(q) for i, q in enumerate(rs.queues)
+                          if not rs.retired[i])
+            inflight = sum(1 for i in range(len(rs.replicas))
+                           if rs.free_at[i] > now and not rs.retired[i])
+            budgets = [rs.queues[i].controller.max_batch_size
+                       for i in rs.routable()]
+            out[f"queue_depth.{mid}"] = float(backlog)
+            out[f"inflight.{mid}"] = float(inflight)
+            out[f"replicas_live.{mid}"] = float(rs.n_live)
+            out[f"replicas_draining.{mid}"] = float(sum(rs.draining))
+            out[f"replicas_failed.{mid}"] = float(
+                sum(1 for r in rs.replicas if r.fail))
+            out[f"replicas_suspected.{mid}"] = float(len(rs.suspected))
+            out[f"est_service.{mid}"] = rs.mean_service()
+            out[f"aimd_budget.{mid}"] = (
+                sum(budgets) / len(budgets) if budgets else 0.0)
+            out[f"lambda.{mid}"] = self._rate(
+                f"routed.{mid}", m.counter(QUERIES_ROUTED, model=mid), dt)
+        return out
+
     def report(self) -> Dict[str, Any]:
         """Canonical telemetry report (metrics.py schema, shared with
         LMServer). With a tracer attached the report gains the run-level
         ``latency_attribution`` (fractions of end-to-end latency per
         component, exact under a virtual clock) and a ``trace`` summary."""
         rep = self.metrics.report("frontend")
+        dur = self.metrics.duration
+        per_model = rep.get("per_model") or {}
+        for mid, rs in sorted(self.replica_sets.items()):
+            row = per_model.get(mid)
+            if row is None:
+                continue
+            # busy-time / wall-time per replica: which copies actually
+            # carried the load (capacity-planning evidence, DESIGN.md §15)
+            row["replicas"] = [
+                {"replica": st["replica"],
+                 "busy_time": st["busy_time"],
+                 "utilization": st["busy_time"] / dur if dur > 0 else 0.0,
+                 "queries": st["queries"],
+                 "retired": st["retired"]}
+                for st in rs.replica_stats()]
         if self.tracer is not None:
             rep["latency_attribution"] = self.tracer.attribution_report()
             rep["trace"] = self.tracer.summary()

@@ -1,7 +1,10 @@
-"""Schema validation for ``repro.metrics/v1`` reports and ``repro.trace/v1``
-span logs (DESIGN.md §9/§13).
+"""Schema validation for the repro observability documents (DESIGN.md
+§9/§13/§15): ``repro.metrics/v1`` reports, ``repro.trace/v1`` span logs,
+``repro.timeseries/v1`` fleet telemetry, and ``repro.audit/v1`` decision
+audit logs.
 
-    PYTHONPATH=src python -m repro.metrics.validate report.json [trace.json ...]
+    PYTHONPATH=src python -m repro.metrics.validate report.json [ts.json ...]
+    PYTHONPATH=src python -m repro.metrics.validate --strict trace.json
 
 Each file is dispatched on its ``schema`` field. Validation is hand-rolled
 (no jsonschema dependency): structural checks on the canonical key sets and
@@ -13,10 +16,19 @@ value types, plus the semantic invariants the schemas promise —
 * ``latency_attribution`` fractions sum to 1 ± 1e-6 when any query was
   attributed;
 * spans are well-formed intervals (``end >= start``), events are instants,
-  and child spans nest within their parent's bounds.
+  and child spans nest within their parent's bounds;
+* time-series points are time-ordered ``[t, value]`` pairs and alert events
+  are well-formed fire/resolve transitions;
+* audit records carry monotonically increasing ``seq`` numbers and the
+  per-action counts tally up to ``total``.
 
-``validate_report`` / ``validate_trace`` return a list of human-readable
-errors (empty = valid); the CLI exits nonzero if any file fails.
+Separately from hard errors, ``document_warnings`` flags *truncation*: a
+span log, series ring, or audit log that dropped records due to bounded
+capacity. Warnings print but pass by default; ``--strict`` promotes them to
+failures (nonzero exit) for CI jobs that must see complete artifacts.
+
+``validate_*`` return a list of human-readable errors (empty = valid); the
+CLI exits nonzero if any file fails.
 """
 
 from __future__ import annotations
@@ -27,6 +39,8 @@ import sys
 from typing import Any, Dict, List
 
 from repro.core.metrics import SCHEMA as METRICS_SCHEMA
+from repro.obs.audit import ACTIONS, AUDIT_SCHEMA
+from repro.obs.timeseries import TIMESERIES_SCHEMA
 from repro.obs.tracer import TRACE_SCHEMA
 
 _HIST_KEYS = {"count", "sum", "mean", "min", "max", "p50", "p95", "p99"}
@@ -224,6 +238,140 @@ def validate_trace(doc: Dict[str, Any]) -> List[str]:
     return errs
 
 
+def validate_timeseries(doc: Dict[str, Any]) -> List[str]:
+    """Validate a ``repro.timeseries/v1`` document; returns errors."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["timeseries: not a JSON object"]
+    if doc.get("schema") != TIMESERIES_SCHEMA:
+        return [f"schema: expected {TIMESERIES_SCHEMA!r}, "
+                f"got {doc.get('schema')!r}"]
+    for key in ("interval_s", "capacity", "samples", "series", "events",
+                "monitor"):
+        if key not in doc:
+            errs.append(f"timeseries: missing key {key!r}")
+    if not _num(doc.get("interval_s")) or doc.get("interval_s", 0) <= 0:
+        errs.append("interval_s: must be a positive number")
+    series = doc.get("series")
+    if not isinstance(series, dict):
+        errs.append("series: must be an object")
+        series = {}
+    for name, row in series.items():
+        if not isinstance(row, dict) or {"points", "total",
+                                         "dropped"} - set(row):
+            errs.append(f"series[{name}]: must carry points/total/dropped")
+            continue
+        for k in ("total", "dropped"):
+            if not isinstance(row[k], int) or row[k] < 0:
+                errs.append(f"series[{name}].{k}: must be a "
+                            "non-negative int")
+        pts = row["points"]
+        if not isinstance(pts, list):
+            errs.append(f"series[{name}].points: must be a list")
+            continue
+        last_t = None
+        for i, pt in enumerate(pts):
+            if (not isinstance(pt, list) or len(pt) != 2
+                    or not _num(pt[0]) or not _num(pt[1])):
+                errs.append(f"series[{name}].points[{i}]: must be a "
+                            "[t, value] numeric pair")
+                break
+            if last_t is not None and pt[0] <= last_t:
+                errs.append(f"series[{name}].points[{i}]: timestamps must "
+                            f"be strictly increasing ({pt[0]!r} after "
+                            f"{last_t!r})")
+                break
+            last_t = pt[0]
+        if isinstance(row.get("total"), int) and len(pts) > row["total"]:
+            errs.append(f"series[{name}]: {len(pts)} retained points "
+                        f"exceed total {row['total']}")
+    events = doc.get("events")
+    if not isinstance(events, list):
+        errs.append("events: must be a list")
+        events = []
+    active = False
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or {"t", "kind", "alert",
+                                        "evidence"} - set(ev):
+            errs.append(f"events[{i}]: must carry t/kind/alert/evidence")
+            continue
+        if ev["kind"] not in ("fire", "resolve"):
+            errs.append(f"events[{i}].kind: must be fire|resolve, "
+                        f"got {ev['kind']!r}")
+            continue
+        # multiwindow alerting is a two-state machine: transitions alternate
+        if ev["kind"] == "fire":
+            if active:
+                errs.append(f"events[{i}]: fire while already firing")
+            active = True
+        else:
+            if not active:
+                errs.append(f"events[{i}]: resolve without a prior fire")
+            active = False
+    mon = doc.get("monitor")
+    if mon is not None and not isinstance(mon, dict):
+        errs.append("monitor: must be an object or null")
+    return errs
+
+
+def validate_audit(doc: Dict[str, Any]) -> List[str]:
+    """Validate a ``repro.audit/v1`` document; returns errors."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["audit: not a JSON object"]
+    if doc.get("schema") != AUDIT_SCHEMA:
+        return [f"schema: expected {AUDIT_SCHEMA!r}, "
+                f"got {doc.get('schema')!r}"]
+    for key in ("total", "dropped", "capacity", "counts", "records"):
+        if key not in doc:
+            errs.append(f"audit: missing key {key!r}")
+    for k in ("total", "dropped", "capacity"):
+        if k in doc and (not isinstance(doc[k], int) or doc[k] < 0):
+            errs.append(f"{k}: must be a non-negative int")
+    counts = doc.get("counts")
+    if not isinstance(counts, dict):
+        errs.append("counts: must be an object")
+    elif isinstance(doc.get("total"), int):
+        tally = sum(v for v in counts.values() if isinstance(v, int))
+        if tally != doc["total"]:
+            errs.append(f"counts: tally {tally} != total {doc['total']}")
+    records = doc.get("records")
+    if not isinstance(records, list):
+        errs.append("records: must be a list")
+        return errs
+    last_seq = None
+    for i, r in enumerate(records):
+        if not isinstance(r, dict) or {"seq", "t", "actor", "action",
+                                       "model", "evidence"} - set(r):
+            errs.append(f"records[{i}]: must carry "
+                        "seq/t/actor/action/model/evidence")
+            continue
+        if not isinstance(r["seq"], int):
+            errs.append(f"records[{i}].seq: must be an int")
+            continue
+        if last_seq is not None and r["seq"] <= last_seq:
+            errs.append(f"records[{i}].seq: must be strictly increasing "
+                        f"({r['seq']} after {last_seq})")
+        last_seq = r["seq"]
+        if not _num(r["t"]):
+            errs.append(f"records[{i}].t: must be numeric")
+        if not isinstance(r["evidence"], dict):
+            errs.append(f"records[{i}].evidence: must be an object")
+        known = ACTIONS.get(r["actor"])
+        if known is not None and r["action"] not in known:
+            errs.append(f"records[{i}]: unknown action {r['action']!r} "
+                        f"for actor {r['actor']!r} (have {list(known)})")
+    return errs
+
+
+_VALIDATORS = {
+    METRICS_SCHEMA: "validate_report",
+    TRACE_SCHEMA: "validate_trace",
+    TIMESERIES_SCHEMA: "validate_timeseries",
+    AUDIT_SCHEMA: "validate_audit",
+}
+
+
 def validate_document(doc: Dict[str, Any]) -> List[str]:
     """Dispatch on the ``schema`` field."""
     schema = doc.get("schema") if isinstance(doc, dict) else None
@@ -231,16 +379,58 @@ def validate_document(doc: Dict[str, Any]) -> List[str]:
         return validate_report(doc)
     if schema == TRACE_SCHEMA:
         return validate_trace(doc)
-    return [f"unknown schema {schema!r}; expected {METRICS_SCHEMA!r} or "
-            f"{TRACE_SCHEMA!r}"]
+    if schema == TIMESERIES_SCHEMA:
+        return validate_timeseries(doc)
+    if schema == AUDIT_SCHEMA:
+        return validate_audit(doc)
+    return [f"unknown schema {schema!r}; expected one of "
+            f"{sorted(_VALIDATORS)}"]
+
+
+def document_warnings(doc: Dict[str, Any]) -> List[str]:
+    """Truncation warnings: valid documents whose bounded buffers dropped
+    data (span log ring, series rings, audit ring) — the artifact is
+    self-consistent but incomplete. ``--strict`` promotes these to
+    failures."""
+    warns: List[str] = []
+    if not isinstance(doc, dict):
+        return warns
+    schema = doc.get("schema")
+    if schema == TRACE_SCHEMA:
+        if isinstance(doc.get("dropped"), int) and doc["dropped"] > 0:
+            warns.append(f"trace: {doc['dropped']} spans dropped "
+                         "(ring capacity exceeded)")
+    elif schema == METRICS_SCHEMA:
+        # reports embed the trace summary when tracing was on
+        tr = doc.get("trace")
+        if (isinstance(tr, dict) and isinstance(tr.get("dropped"), int)
+                and tr["dropped"] > 0):
+            warns.append(f"trace: {tr['dropped']} spans dropped "
+                         "(ring capacity exceeded)")
+    elif schema == TIMESERIES_SCHEMA:
+        for name, row in sorted((doc.get("series") or {}).items()):
+            if isinstance(row, dict) and isinstance(row.get("dropped"), int) \
+                    and row["dropped"] > 0:
+                warns.append(f"series[{name}]: {row['dropped']} points "
+                             "dropped (ring capacity exceeded)")
+    elif schema == AUDIT_SCHEMA:
+        if isinstance(doc.get("dropped"), int) and doc["dropped"] > 0:
+            warns.append(f"audit: {doc['dropped']} records dropped "
+                         "(ring capacity exceeded)")
+    return warns
 
 
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.metrics.validate",
-        description="Validate repro.metrics/v1 reports and repro.trace/v1 "
-                    "span logs (dispatched on the schema field).")
+        description="Validate repro observability documents — "
+                    "repro.metrics/v1 reports, repro.trace/v1 span logs, "
+                    "repro.timeseries/v1 fleet telemetry, repro.audit/v1 "
+                    "audit logs (dispatched on the schema field).")
     p.add_argument("files", nargs="+", help="JSON documents to validate")
+    p.add_argument("--strict", action="store_true",
+                   help="treat truncation warnings (dropped spans / series "
+                        "points / audit records) as failures")
     return p
 
 
@@ -257,13 +447,21 @@ def main(argv=None) -> int:
             failed = True
             continue
         errs = validate_document(doc)
+        warns = document_warnings(doc) if not errs else []
         if errs:
             failed = True
             print(f"FAIL {path}:")
             for e in errs:
                 print(f"  - {e}")
+        elif warns and args.strict:
+            failed = True
+            print(f"FAIL {path} (strict):")
+            for w in warns:
+                print(f"  - warning: {w}")
         else:
             print(f"OK   {path} ({doc.get('schema')})")
+            for w in warns:
+                print(f"  - warning: {w}")
     return 1 if failed else 0
 
 

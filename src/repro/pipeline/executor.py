@@ -51,7 +51,7 @@ class PipelineExecutor:
                  seed: int = 0, admission=None, router=None,
                  metrics=None, service_priors: Optional[Dict[str, float]] = None,
                  replan_every: int = 64, aimd_kwargs: Optional[dict] = None,
-                 tracer=None):
+                 tracer=None, audit=None):
         self.graph = graph
         self.slo = slo
         # span tracing (repro.obs, DESIGN.md §13): the tracer is shared
@@ -89,7 +89,7 @@ class PipelineExecutor:
         self.clip = Clipper(sets, Exp4Policy(sorted(sets)), slo=slo,
                             cache_size=cache_size, use_cache=use_cache,
                             seed=seed, metrics=metrics, router=router,
-                            admission=admission, tracer=tracer)
+                            admission=admission, tracer=tracer, audit=audit)
         self.metrics = self.clip.metrics
         self._pseq = itertools.count()
         self._inflight: Dict[int, dict] = {}
@@ -151,6 +151,16 @@ class PipelineExecutor:
     @property
     def replica_sets(self) -> Dict[str, ReplicaSet]:
         return self.clip.replica_sets
+
+    def timeseries_probe(self, now: float, dt: float) -> Dict[str, float]:
+        """FleetSampler probe: the underlying frontend's fleet series plus
+        pipeline-level state — in-flight pipeline walks and the planner's
+        live per-stage SLO shares (repro.obs.timeseries, DESIGN.md §15)."""
+        out = self.clip.timeseries_probe(now, dt)
+        out["pipeline.inflight"] = float(len(self._inflight))
+        for name, share in sorted(self.split.shares.items()):
+            out[f"pipeline.slo_share.{name}"] = share
+        return out
 
     # ------------------------------------------------------------------
     # planning
@@ -300,6 +310,20 @@ class PipelineExecutor:
         also gains ``latency_attribution`` and a ``trace`` summary (same
         contract as ``Clipper.report``)."""
         rep = self.metrics.report("pipeline")
+        dur = self.metrics.duration
+        per_model = rep.get("per_model") or {}
+        for mid, rs in sorted(self.replica_sets.items()):
+            row = per_model.get(mid)
+            if row is None:
+                continue
+            # per-replica busy-time / wall-time, as in Clipper.report
+            row["replicas"] = [
+                {"replica": st["replica"],
+                 "busy_time": st["busy_time"],
+                 "utilization": st["busy_time"] / dur if dur > 0 else 0.0,
+                 "queries": st["queries"],
+                 "retired": st["retired"]}
+                for st in rs.replica_stats()]
         jobs = self.metrics.counter(M.PIPELINE_STAGE_JOBS)
         skipped = self.metrics.counter(M.PIPELINE_STAGES_SKIPPED)
         escalated = self.metrics.counter(M.PIPELINE_ESCALATIONS)

@@ -19,6 +19,7 @@ from __future__ import annotations
 import argparse
 import sys
 
+from repro.obs.cli import add_fleet_args, build_fleet, write_fleet
 from repro.pipeline.scenario import (CASCADE_THRESHOLD, pipeline_scenario,
                                      run_lmcascade, run_pipeline)
 from repro.workloads.scenario import SCENARIOS
@@ -60,6 +61,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--trace-sample-rate", type=float, default=1.0,
                    help="head-based trace sampling rate in [0, 1] "
                         "(default 1.0; only meaningful with --trace-out)")
+    add_fleet_args(p)
     return p
 
 
@@ -89,20 +91,24 @@ def main(argv=None) -> int:
             parser.error("--trace-sample-rate must be in [0, 1]")
         from repro.obs import Tracer
         tracer = Tracer(sample_rate=args.trace_sample_rate, seed=sc.seed)
+    sampler, audit = build_fleet(args, parser)
     if args.scenario == "lmcascade":
         if not args.use_cache:
             parser.error("--no-cache applies to the frontend pipelines "
                          "only (lmcascade has no intermediate-result cache)")
         thr = 0.9 if args.threshold is None else args.threshold
-        rep = run_lmcascade(sc, threshold=thr, tracer=tracer)
+        rep = run_lmcascade(sc, threshold=thr, tracer=tracer,
+                            sampler=sampler, audit=audit)
     else:
         thr = CASCADE_THRESHOLD if args.threshold is None else args.threshold
         rep = run_pipeline(sc, args.scenario, threshold=thr,
-                           use_cache=args.use_cache, tracer=tracer)
+                           use_cache=args.use_cache, tracer=tracer,
+                           sampler=sampler, audit=audit)
     text = json.dumps(rep, sort_keys=True, indent=2)
     if args.trace_out:
         with open(args.trace_out, "w") as f:
             f.write(tracer.to_json() + "\n")
+    write_fleet(args, sampler, audit)
     if args.report_out:
         with open(args.report_out, "w") as f:
             f.write(text + "\n")

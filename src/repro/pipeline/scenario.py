@@ -27,7 +27,7 @@ from repro.pipeline.executor import PipelineExecutor
 from repro.pipeline.graph import PipelineGraph, cascade_graph, fanout_graph
 from repro.workloads import traces as T
 from repro.workloads.scenario import (D_FEAT, N_CLASSES, SCENARIOS, Scenario,
-                                      trace_meta)
+                                      sampled_replay, trace_meta)
 
 # cascade gate: 2 draft models agree (confidence 1.0) or split (0.5);
 # anything below this escalates, so the threshold means "escalate on any
@@ -147,7 +147,7 @@ def build_graph(kind: str, *, threshold: float = CASCADE_THRESHOLD
 def build_executor(scenario: Scenario, kind: str = "cascade", *,
                    threshold: float = CASCADE_THRESHOLD,
                    admission=None, router=None, use_cache: bool = True,
-                   zoo=None, tracer=None) -> PipelineExecutor:
+                   zoo=None, tracer=None, audit=None) -> PipelineExecutor:
     """``zoo``: a prebuilt ``pipeline_models(scenario)`` tuple, so callers
     that also need the models (replica factories) construct them once."""
     models, lat, priors, _ = zoo if zoo is not None else \
@@ -157,20 +157,28 @@ def build_executor(scenario: Scenario, kind: str = "cascade", *,
         slo=scenario.slo, latency_models=lat, replicas=scenario.replicas,
         batch_delay=scenario.batch_delay, seed=scenario.seed,
         service_priors=priors, admission=admission, router=router,
-        use_cache=use_cache, tracer=tracer)
+        use_cache=use_cache, tracer=tracer, audit=audit)
 
 
 def run_pipeline(scenario: Scenario, kind: str = "cascade", *,
                  threshold: float = CASCADE_THRESHOLD,
-                 use_cache: bool = True, tracer=None) -> Dict[str, Any]:
+                 use_cache: bool = True, tracer=None, sampler=None,
+                 audit=None) -> Dict[str, Any]:
     """Replay the scenario's trace through a pipeline and report — the
     pipeline counterpart of ``ScenarioRunner.run`` (byte-identical JSON per
-    seed)."""
+    seed). ``sampler`` / ``audit``: optional repro.obs collectors."""
     ex = build_executor(scenario, kind, threshold=threshold,
-                        use_cache=use_cache, tracer=tracer)
+                        use_cache=use_cache, tracer=tracer, audit=audit)
     trace = T.query_trace(scenario.arrival_times(), scenario.seed,
                           d_feat=D_FEAT, pool=scenario.pool)
-    ex.replay(trace)
+    if sampler is not None:
+        sampler.bind(metrics=ex.metrics, tracer=tracer)
+        sampler.add_probe(ex.timeseries_probe)
+        sampled_replay(ex.clip,
+                       lambda x, ctx, at: ex.submit(x, arrival_time=at),
+                       trace, sampler)
+    else:
+        ex.replay(trace)
     rep = ex.report()
     rep["scenario"] = dataclasses.asdict(scenario)
     rep["meta"] = trace_meta(scenario)
@@ -179,7 +187,7 @@ def run_pipeline(scenario: Scenario, kind: str = "cascade", *,
 
 def run_lmcascade(scenario: Scenario, *, threshold: float = 0.9,
                   draft_admission=None, verify_admission=None,
-                  tracer=None) -> Dict[str, Any]:
+                  tracer=None, sampler=None, audit=None) -> Dict[str, Any]:
     """Draft-then-verify across two calibrated-simulation LM engines: the
     draft engine decodes every prompt with a cheap service model; drafts
     that fail the distinct-token confidence check re-decode on the verify
@@ -217,14 +225,22 @@ def run_lmcascade(scenario: Scenario, *, threshold: float = 0.9,
                      slo=s.slo, temperature=0.0, seed=s.seed, clock=clock,
                      service_model=service_model(1.0), model_id="draft",
                      metrics=MetricsRegistry(s.slo),
-                     admission_control=draft_admission, tracer=tracer)
+                     admission_control=draft_admission, tracer=tracer,
+                     audit=audit)
     verify = LMServer(model, mesh, rules, slots=s.slots, max_len=64,
                       slo=s.slo, temperature=0.0, seed=s.seed + 1,
                       clock=clock, service_model=service_model(4.0),
                       model_id="verify", metrics=MetricsRegistry(s.slo),
-                      admission_control=verify_admission, tracer=tracer)
+                      admission_control=verify_admission, tracer=tracer,
+                      audit=audit)
     casc = LMCascade(draft, verify, escalate=make_escalate(threshold),
                      slo=s.slo)
+    if sampler is not None:
+        # burn-rate monitoring tracks the draft tier (every request enters
+        # there); both tiers' fleet series are sampled
+        sampler.bind(metrics=draft.metrics, tracer=tracer)
+        sampler.add_probe(draft.timeseries_probe)
+        sampler.add_probe(verify.timeseries_probe)
     rng = np.random.default_rng(s.seed)
     times = s.arrival_times()[:s.lm_requests]
     if len(times) == 0:
@@ -239,8 +255,12 @@ def run_lmcascade(scenario: Scenario, *, threshold: float = 0.9,
             i += 1
         if not casc.pending and i < len(pending):
             clock.advance(pending[i][0] - clock.now)
+            if sampler is not None:
+                sampler.sample_until(clock.now)
             continue
         casc.step(params, params)
+        if sampler is not None:
+            sampler.sample_until(clock.now)
     rep = casc.report()
     rep["scenario"] = dataclasses.asdict(s)
     rep["meta"] = trace_meta(s)

@@ -157,7 +157,7 @@ class LMServer:
                  fused: bool = True, prefill_slo_frac: float = 0.5,
                  pad_prompts: Optional[bool] = None,
                  on_finish: Optional[Callable[["Request"], None]] = None,
-                 tracer=None, faults=None):
+                 tracer=None, faults=None, audit=None):
         self.model = model
         self.mesh = mesh
         self.rules = rules
@@ -179,6 +179,11 @@ class LMServer:
         self.metrics = metrics if metrics is not None else MetricsRegistry(slo)
         # span tracing (repro.obs, DESIGN.md §13): None = tracing off
         self.tracer = tracer
+        # control-plane decision audit (repro.obs.audit, DESIGN.md §15):
+        # admission sheds record their backlog/wait evidence here. None = off
+        self.audit = audit
+        # probe state for repro.obs.timeseries windowed rates
+        self._ts_prev: Dict[str, float] = {}
         # SLO-aware admission control (repro.cluster.admission): consulted
         # per submit; rejected requests are shed before they touch the
         # queue. Distinct from ``self.admission``, the AIMD *batch-size*
@@ -217,6 +222,9 @@ class LMServer:
         self.decode_steps = 0
         self.decode_host_syncs = 0
         self.prefill_dispatches = 0
+        # prefill dispatches per ladder rung (padded prompt length) — which
+        # rungs the workload actually exercises (repro.obs.timeseries)
+        self.rung_dispatches: Dict[int, int] = {}
 
         self.cache = model.init_cache(slots, max_len)
         self.lengths = jnp.zeros((slots,), jnp.int32)
@@ -384,6 +392,8 @@ class LMServer:
                 params, jnp.asarray(toks))
         jax.block_until_ready(logits)
         self.prefill_dispatches += 1
+        self.rung_dispatches[int(plen)] = (
+            self.rung_dispatches.get(int(plen), 0) + 1)
         # the service model is charged the *executed* shape (padded bucket),
         # matching what wall-clock mode measures for the same workload
         dt = self._service_time("prefill", nb, plen, t0)
@@ -558,6 +568,40 @@ class LMServer:
         private queue/slot state)."""
         return bool(self._queue or self._active)
 
+    def timeseries_probe(self, now: float, dt: float) -> Dict[str, float]:
+        """FleetSampler probe: slot occupancy, queue depth, AIMD prefill
+        budget, shed/throughput rates, and per-rung dispatch rates
+        (repro.obs.timeseries, DESIGN.md §15). Read-only on the engine."""
+        mid = self.model_id
+
+        def rate(key: str, cur: float) -> float:
+            prev = self._ts_prev.get(key, 0.0)
+            self._ts_prev[key] = cur
+            return (cur - prev) / dt
+
+        out = {
+            f"lm.slots_active.{mid}": float(len(self._active)),
+            f"lm.slots_free.{mid}": float(self.slots - len(self._active)),
+            f"lm.queue_depth.{mid}": float(len(self._queue)),
+            f"lm.aimd_budget.{mid}": float(self.admission.max_batch_size),
+            f"lm.est_service.{mid}": self.est_request_service(),
+            # model-scoped (not the frontend's global names): a cascade
+            # samples two engines into one document without collisions
+            f"lm.lambda.{mid}": rate(
+                "submitted", self.metrics.counter(M.QUERIES_SUBMITTED)),
+            f"lm.throughput.{mid}": rate(
+                "completed", self.metrics.counter(M.QUERIES_COMPLETED)),
+            f"lm.shed_rate.{mid}": rate(
+                "shed", self.metrics.counter(M.QUERIES_SHED)),
+            f"lm.decode_steps.{mid}": rate("decode", self.decode_steps),
+            f"lm.prefill_dispatches.{mid}": rate(
+                "prefill", self.prefill_dispatches),
+        }
+        for plen, n in sorted(self.rung_dispatches.items()):
+            out[f"lm.rung_dispatches.{plen}.{mid}"] = rate(
+                f"rung.{plen}", n)
+        return out
+
     def step(self, params) -> None:
         self._admit(params)
         self._decode_once(params)
@@ -595,6 +639,9 @@ class LMServer:
                 "compiled_shapes": self.prefill_compiles,
                 # ladder rungs actually compiled: [batch, prompt_len, padded]
                 "shapes": [list(k) for k in sorted(self._prefill_cache)],
+                # dispatches per (padded) prompt length — rung utilization
+                "rung_dispatches": {str(k): v for k, v in
+                                    sorted(self.rung_dispatches.items())},
             },
             "decode": {
                 "steps": self.decode_steps,

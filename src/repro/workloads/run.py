@@ -18,6 +18,7 @@ import argparse
 import dataclasses
 import sys
 
+from repro.obs.cli import add_fleet_args, build_fleet, write_fleet
 from repro.workloads.scenario import SCENARIOS, ScenarioRunner
 
 
@@ -49,6 +50,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--trace-sample-rate", type=float, default=1.0,
                    help="head-based trace sampling rate in [0, 1] "
                         "(default 1.0; only meaningful with --trace-out)")
+    add_fleet_args(p)
     return p
 
 
@@ -78,10 +80,13 @@ def main(argv=None) -> int:
             parser.error("--trace-sample-rate must be in [0, 1]")
         from repro.obs import Tracer
         tracer = Tracer(sample_rate=args.trace_sample_rate, seed=sc.seed)
-    text = ScenarioRunner(sc, tracer=tracer).run_json(args.stack)
+    sampler, audit = build_fleet(args, parser)
+    text = ScenarioRunner(sc, tracer=tracer, sampler=sampler,
+                          audit=audit).run_json(args.stack)
     if args.trace_out:
         with open(args.trace_out, "w") as f:
             f.write(tracer.to_json() + "\n")
+    write_fleet(args, sampler, audit)
     if args.out:
         with open(args.out, "w") as f:
             f.write(text + "\n")

@@ -131,16 +131,48 @@ def frontend_models(scenario: Scenario):
     return models, lat
 
 
+def sampled_replay(serve, submit, trace, sampler) -> None:
+    """Open-loop replay with fleet sampling: the ``replay`` contract, but
+    the clock also steps through every sample boundary, so the sampler
+    observes the run at its fixed interval even across idle gaps.
+    ``serve`` needs ``run`` / ``now`` (settable) / ``pending``;
+    ``submit(x, ctx, at)`` issues one query."""
+    t = 0.0
+    for at, x, ctx in trace:
+        while t + sampler.interval <= at:
+            t += sampler.interval
+            serve.run(until=t)
+            if serve.now < t:
+                # idle gap: advance the virtual clock so delayed batches
+                # see time passing, then dispatch what became ready
+                serve.now = t
+                serve.run(until=t)
+            sampler.sample_until(t)
+        serve.run(until=at)
+        submit(x, ctx, at)
+    while serve.pending:
+        t += sampler.interval
+        serve.run(until=t)
+        if serve.now < t:
+            serve.now = t
+            serve.run(until=t)
+        sampler.sample_until(t)
+
+
 class ScenarioRunner:
     """Replays one scenario through a serving stack; ``run`` returns the
     shared-schema report dict, ``run_json`` its stable JSON rendering."""
 
-    def __init__(self, scenario: Scenario, *, tracer=None):
+    def __init__(self, scenario: Scenario, *, tracer=None, sampler=None,
+                 audit=None):
         """``tracer``: an optional ``repro.obs.Tracer`` threaded into
         whichever stack runs — span logs are byte-identical per seed, like
-        the reports."""
+        the reports. ``sampler`` / ``audit``: optional repro.obs
+        ``FleetSampler`` / ``AuditLog``, attached the same way."""
         self.scenario = scenario
         self.tracer = tracer
+        self.sampler = sampler
+        self.audit = audit
 
     # -- frontend (discrete-event Clipper) ------------------------------
     def run_frontend(self) -> Dict[str, Any]:
@@ -149,10 +181,16 @@ class ScenarioRunner:
         clip = make_clipper(models, "exp4", slo=s.slo,
                             replicas=s.replicas, latency_models=lat,
                             batch_delay=s.batch_delay, seed=s.seed,
-                            tracer=self.tracer)
+                            tracer=self.tracer, audit=self.audit)
         trace = T.query_trace(s.arrival_times(), s.seed, d_feat=D_FEAT,
                               pool=s.pool)
-        clip.replay(trace)
+        if self.sampler is not None:
+            self.sampler.bind(metrics=clip.metrics, tracer=self.tracer)
+            self.sampler.add_probe(clip.timeseries_probe)
+            sampled_replay(clip, lambda x, ctx, at: clip.submit(
+                x, context_id=ctx, arrival_time=at), trace, self.sampler)
+        else:
+            clip.replay(trace)
         return clip.report()
 
     # -- lmserver (continuous batching) ---------------------------------
@@ -187,7 +225,7 @@ class ScenarioRunner:
                        slo=s.slo, temperature=0.0, seed=s.seed,
                        clock=clock, service_model=service_model,
                        model_id=cfg.name, admission_control=admission,
-                       tracer=self.tracer)
+                       tracer=self.tracer, audit=self.audit)
         rng = np.random.default_rng(s.seed)
         # open-loop arrivals, thinned to a fixed request count so CLI runs
         # stay cheap; the arrival *process* is the scenario's
@@ -205,6 +243,9 @@ class ScenarioRunner:
         clock — deterministic end to end."""
         s = self.scenario
         srv, clock, params, pending = self.build_lmserver(admission=admission)
+        if self.sampler is not None:
+            self.sampler.bind(metrics=srv.metrics, tracer=self.tracer)
+            self.sampler.add_probe(srv.timeseries_probe)
         i = 0
         while i < len(pending) or srv.pending:
             # release arrivals up to the virtual now
@@ -214,8 +255,12 @@ class ScenarioRunner:
                 i += 1
             if not srv.pending and i < len(pending):
                 clock.advance(pending[i][0] - clock.now)   # idle: jump ahead
+                if self.sampler is not None:
+                    self.sampler.sample_until(clock.now)
                 continue
             srv.step(params)
+            if self.sampler is not None:
+                self.sampler.sample_until(clock.now)
         return srv.report()
 
     # -- entry points ---------------------------------------------------
@@ -236,10 +281,12 @@ class ScenarioRunner:
 
 
 def run_scenario(name: str, stack: str = "frontend", *, tracer=None,
+                 sampler=None, audit=None,
                  **overrides: Any) -> Dict[str, Any]:
     """Convenience: look up a named scenario, apply overrides, run it."""
     if name not in SCENARIOS:
         raise KeyError(
             f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
     sc = dataclasses.replace(SCENARIOS[name], **overrides)
-    return ScenarioRunner(sc, tracer=tracer).run(stack)
+    return ScenarioRunner(sc, tracer=tracer, sampler=sampler,
+                          audit=audit).run(stack)
